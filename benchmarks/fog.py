@@ -1,0 +1,98 @@
+"""Shared harness for the paper-reproduction benchmarks: one fog
+experiment = (costs, topology, plan, federated run) -> accuracy + cost
+decomposition. Sizes default below paper scale to stay CPU-friendly;
+--full restores n_train=60k, T=100."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import estimator as est
+from repro.core import federated as F
+from repro.core import movement as mv
+from repro.core.costs import (synthetic_costs, testbed_like_costs,
+                              with_capacity)
+from repro.core.topology import make_topology
+from repro.data import pipeline as pl
+from repro.data.synthetic import make_image_dataset
+
+
+@dataclasses.dataclass
+class BenchScale:
+    n_train: int = 20_000
+    n_test: int = 4_000
+    T: int = 40
+    tau: int = 5
+    eta: float = 0.1
+    repeats: int = 1
+
+
+QUICK = BenchScale(n_train=8_000, n_test=2_000, T=20, tau=5)
+DEFAULT = BenchScale()
+FULL = BenchScale(n_train=60_000, n_test=10_000, T=100, tau=10, repeats=3)
+
+
+@functools.lru_cache(maxsize=2)
+def dataset(n_train: int, n_test: int, seed: int = 0):
+    return make_image_dataset(n_train=n_train, n_test=n_test, seed=seed)
+
+
+def make_plan(setting: str, traces, adj, D, error_model="discard",
+              gamma=1.0):
+    T_, n = D.shape
+    if setting == "A":
+        return mv.no_movement_plan(T_, n)
+    tr = traces
+    if setting in ("C", "E"):
+        tr = est.estimate_traces(traces, L=5)
+        D = est.estimate_counts(D, L=5)
+    if error_model == "discard":
+        plan = mv.greedy_linear(tr, adj)
+    else:
+        plan = mv.solve_convex(tr, adj, D, error_model=error_model,
+                               gamma=gamma, iters=400)
+    if setting in ("D", "E"):
+        plan = mv.repair_capacities(plan, traces, adj, D)
+    return plan
+
+
+def fog_experiment(*, scale: BenchScale, n=10, model="mlp", iid=True,
+                   costs="testbed", topology="full", rho=1.0,
+                   setting="B", error_model="discard", medium="wifi",
+                   p_exit=0.0, p_entry=0.0, f_err=0.7, seed=0,
+                   train=True) -> dict:
+    """One full experiment; returns accuracy + cost decomposition."""
+    rng = np.random.default_rng(seed)
+    data = dataset(scale.n_train, scale.n_test)
+    cfg = F.FedConfig(n=n, T=scale.T, tau=scale.tau, eta=scale.eta,
+                      model=model, iid=iid, seed=seed,
+                      p_exit=p_exit, p_entry=p_entry)
+    if costs == "testbed":
+        traces = testbed_like_costs(n, scale.T, rng, f_err=f_err,
+                                    medium=medium)
+    else:
+        traces = synthetic_costs(n, scale.T, rng, f_err=f_err)
+    adj = make_topology(topology, n, rng, rho=rho,
+                        costs=traces.c_node.mean(0))
+    streams = pl.poisson_streams(n, scale.T, data[1], iid=iid, rng=rng)
+    D = pl.counts(streams)
+    if setting in ("D", "E"):
+        traces = with_capacity(traces, float(D.mean()))
+    plan = make_plan(setting, traces, adj, D, error_model=error_model)
+    cost = mv.plan_cost(plan, traces, D, error_model=error_model)
+    out = {"setting": setting, "cost": cost, "n": n, "rho": rho,
+           "tau": scale.tau, "topology": topology, "iid": iid}
+    if train:
+        activity = (F.churn_activity(cfg, rng)
+                    if (p_exit or p_entry) else None)
+        hist = F.run_network_aware(cfg, data, traces, adj, plan,
+                                   streams=streams, activity=activity)
+        out.update(acc=hist["test_acc"][-1],
+                   acc_curve=hist["test_acc"],
+                   sim_before=hist["sim_before"],
+                   sim_after=hist["sim_after"],
+                   avg_active=float(np.mean([a.sum()
+                                             for a in hist["active"]])))
+    return out

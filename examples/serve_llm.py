@@ -1,0 +1,12 @@
+"""Batched LLM serving with KV/SSM caches across three architecture
+families (dense GQA, sliding-window MoE, attention-free SSD).
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    for arch in ("qwen3-14b", "mixtral-8x7b", "mamba2-1.3b"):
+        print(f"\n=== {arch} (reduced smoke config) ===")
+        serve_main(["--arch", arch, "--batch", "4",
+                    "--prompt-len", "8", "--gen", "16"])

@@ -1,0 +1,50 @@
+"""Summarize all §Perf iteration runs (results/perf_iters*.jsonl) against
+the baseline, per (arch × shape).
+
+    PYTHONPATH=src python scripts/perf_summary.py
+"""
+import glob
+import json
+
+
+def gb(r):
+    m = r.get("memory", {})
+    return (m.get("argument_size_in_bytes", 0)
+            + m.get("temp_size_in_bytes", 0)) / 1e9
+
+
+def main():
+    base = {}
+    for line in open("results/dryrun_baseline.jsonl"):
+        r = json.loads(line)
+        if "error" not in r and r["mesh"] == "16x16":
+            base[(r["arch"], r["shape"])] = r
+    rows = []
+    seen = set()
+    for f in sorted(glob.glob("results/perf_iters*.jsonl")):
+        for line in open(f):
+            r = json.loads(line)
+            if "error" in r:
+                continue
+            key = (r["arch"], r["shape"], json.dumps(r.get("variant", {}),
+                                                     sort_keys=True))
+            if key in seen:
+                continue
+            seen.add(key)
+            rows.append(r)
+    print(f"{'arch':<14}{'shape':<12}{'variant':<66}"
+          f"{'coll_s':>8}{'GB/dev':>8}{'Δcoll':>7}{'ΔGB':>7}")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        b = base.get((r["arch"], r["shape"]))
+        if not b:
+            continue
+        dc = r["collective_s"] / max(b["collective_s"], 1e-12) - 1
+        dg = gb(r) / max(gb(b), 1e-12) - 1
+        print(f"{r['arch']:<14}{r['shape']:<12}"
+              f"{json.dumps(r.get('variant', {})):<66}"
+              f"{r['collective_s']:>8.3f}{gb(r):>8.1f}"
+              f"{dc:>+7.0%}{dg:>+7.0%}")
+
+
+if __name__ == "__main__":
+    main()

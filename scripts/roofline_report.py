@@ -1,0 +1,79 @@
+"""Merge results/dryrun_baseline.jsonl (HLO-derived, structural) with the
+analytic roofline model into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python scripts/roofline_report.py [--jsonl PATH] [--md]
+"""
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.launch import steps as St
+from repro.launch.roofline import analytic_roofline, dominant_term
+
+
+def build_rows(jsonl_path: str):
+    hlo = {}
+    for line in open(jsonl_path):
+        r = json.loads(line)
+        if "error" in r:
+            continue
+        hlo[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = []
+    for (arch, shape_name, mesh), h in sorted(hlo.items()):
+        cfg = St.config_for_shape(get_config(arch),
+                                  INPUT_SHAPES[shape_name])
+        mesh_shape = tuple(int(x) for x in mesh.split("x"))
+        a = analytic_roofline(cfg, INPUT_SHAPES[shape_name], mesh_shape)
+        rows.append({
+            "arch": arch, "shape": shape_name, "mesh": mesh,
+            "analytic": a, "hlo": h,
+            "dominant": dominant_term(a),
+            "mfu_bound": a["mfu_bound"],
+        })
+    return rows
+
+
+def fmt_s(x):
+    return f"{x:.3g}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun_baseline.jsonl")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = build_rows(args.jsonl)
+    sel = [r for r in rows if r["mesh"] == args.mesh]
+    if args.md:
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | MFU bound | HLO coll_s | HBM GB/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+    else:
+        print(f"{'arch':<20}{'shape':<13}{'comp_s':>9}{'mem_s':>9}"
+              f"{'coll_s':>9} {'dominant':<12}{'mfu_bnd':>8}"
+              f"{'hlo_coll':>9}{'GB/dev':>8}")
+    for r in sorted(sel, key=lambda r: (r["shape"], r["arch"])):
+        a, h = r["analytic"], r["hlo"]
+        mem = h.get("memory", {})
+        gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)) / 1e9
+        if args.md:
+            print(f"| {r['arch']} | {r['shape']} | {fmt_s(a['compute_s'])} "
+                  f"| {fmt_s(a['memory_s'])} | {fmt_s(a['collective_s'])} "
+                  f"| {r['dominant'].replace('_s','')} "
+                  f"| {a['mfu_bound']:.2f} | {fmt_s(h['collective_s'])} "
+                  f"| {gb:.1f} |")
+        else:
+            print(f"{r['arch']:<20}{r['shape']:<13}"
+                  f"{a['compute_s']:>9.3g}{a['memory_s']:>9.3g}"
+                  f"{a['collective_s']:>9.3g} {r['dominant']:<12}"
+                  f"{a['mfu_bound']:>8.2f}{h['collective_s']:>9.3g}"
+                  f"{gb:>8.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Dev sanity: forward + grad + decode for every arch's smoke config."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import smoke_base
+from repro.configs.registry import all_archs, get_config
+from repro.models import transformer as T
+from repro.models.module import abstract_params, init_params, param_count
+
+rng = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+for arch in all_archs():
+    cfg = get_config(arch, smoke=True)
+    sp = T.specs(cfg)
+    params = init_params(sp, rng, jnp.float32)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(rng, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.vision_patches:
+        batch["patch_embeds"] = jax.random.normal(
+            rng, (B, cfg.vision_patches, cfg.d_model))
+    try:
+        logits, aux = jax.jit(lambda p, b: T.forward(p, b, cfg))(params, batch)
+        assert logits.shape == (B, S, cfg.vocab_padded), logits.shape
+        assert bool(jnp.all(jnp.isfinite(logits))), "nan/inf in logits"
+        loss, _ = T.loss_fn(params, batch, cfg)
+        g = jax.grad(lambda p: T.loss_fn(p, batch, cfg)[0])(params)
+        gnorm = jax.tree_util.tree_reduce(
+            lambda a, x: a + jnp.sum(jnp.square(x)), g, 0.0)
+        assert bool(jnp.isfinite(gnorm)), "bad grads"
+        # decode
+        cache_sp = T.init_cache_specs(cfg, B, 64)
+        cache = init_params(cache_sp, rng, jnp.float32)
+        tok = batch["tokens"][:, :1]
+        lg, cache = jax.jit(
+            lambda p, c, t: T.decode_step(p, c, {"tokens": t}, 3, cfg)
+        )(params, cache, tok)
+        assert lg.shape == (B, 1, cfg.vocab_padded), lg.shape
+        assert bool(jnp.all(jnp.isfinite(lg))), "nan in decode logits"
+        print(f"OK   {arch:22s} params={param_count(sp):,} loss={float(loss):.3f}")
+    except Exception as e:
+        print(f"FAIL {arch:22s} {type(e).__name__}: {e}")
+        import traceback; traceback.print_exc()
+        sys.exit(1)
+print("all smoke archs OK")

@@ -1,0 +1,65 @@
+"""Msgpack pytree checkpoints (no orbax in this environment).
+
+Arrays are gathered to host (``jax.device_get``) and stored with dtype +
+shape; the tree structure is encoded by flattened key-paths so loading is
+resilient to dict ordering. bfloat16 round-trips via a uint16 view.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x) -> dict:
+    x = np.asarray(jax.device_get(x))
+    dtype = str(x.dtype)
+    if x.dtype == jnp.bfloat16:
+        x = x.view(np.uint16)
+        dtype = "bfloat16"
+    return {"dtype": dtype, "shape": list(x.shape),
+            "data": x.tobytes()}
+
+
+def _decode_leaf(d) -> np.ndarray:
+    dtype = d["dtype"]
+    if dtype == "bfloat16":
+        arr = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return arr.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], np.dtype(dtype)).reshape(d["shape"])
+
+
+def save(path: str, tree, metadata: dict | None = None) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    payload = {
+        "meta": metadata or {},
+        "leaves": {jax.tree_util.keystr(p): _encode_leaf(v)
+                   for p, v in flat},
+    }
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    leaves = payload["leaves"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for p, tmpl in flat:
+        key = jax.tree_util.keystr(p)
+        if key not in leaves:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = _decode_leaf(leaves[key])
+        t_shape = tuple(getattr(tmpl, "shape", ()) or ())
+        if tuple(arr.shape) != t_shape:
+            raise ValueError(f"{key}: shape {arr.shape} != template {t_shape}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), payload["meta"]

@@ -1,0 +1,142 @@
+"""Cost and capacity models (paper §III-A, §V-A).
+
+Processing cost c_i(t) per datapoint, link cost c_ij(t) per offloaded
+datapoint, error-cost weight f_i(t), node capacity C_i(t), link capacity
+C_ij(t).
+
+Three cost sources:
+* ``synthetic``     — c_i, c_ij ~ U(0,1) i.i.d. (paper's synthetic setting)
+* ``testbed_like``  — correlated traces emulating the paper's Raspberry-Pi
+  measurements: a device's compute speed and its link speed share a latent
+  "device quality" factor (the paper observed this correlation is what
+  makes offloading decisions cost-effective on real hardware), plus AR(1)
+  temporal noise, scaled to [0, 1] like the paper's normalization.
+* ``ici``           — production-mesh costs: c_ij from bytes/ICI-bandwidth,
+  c_i from per-shard step-time estimates (used by the big-model trainer).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CostTraces:
+    """Time-indexed network characteristics. All arrays are float64.
+
+    c_node (T, n)      per-datapoint processing cost c_i(t)
+    c_link (T, n, n)   per-datapoint offload cost c_ij(t)
+    f_err  (T, n)      error cost weight f_i(t)
+    cap_node (T, n)    node capacity C_i(t) (datapoints per interval)
+    cap_link (T, n, n) link capacity C_ij(t)
+    """
+
+    c_node: np.ndarray
+    c_link: np.ndarray
+    f_err: np.ndarray
+    cap_node: np.ndarray
+    cap_link: np.ndarray
+
+    @property
+    def T(self) -> int:
+        return self.c_node.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.c_node.shape[1]
+
+    def slice_t(self, t: int) -> "CostTraces":
+        return CostTraces(*[a[t:t + 1] for a in dataclasses.astuple(self)])
+
+
+def _ar1(rng, T, shape, phi=0.9, sigma=0.1):
+    x = np.empty((T, *shape))
+    x[0] = rng.random(shape)
+    for t in range(1, T):
+        x[t] = phi * x[t - 1] + (1 - phi) * rng.random(shape) \
+            + sigma * rng.standard_normal(shape)
+    return x
+
+
+def _minmax(x):
+    lo, hi = x.min(), x.max()
+    return (x - lo) / (hi - lo + 1e-12)
+
+
+def synthetic_costs(n: int, T: int, rng: np.random.Generator, *,
+                    f_err: float = 0.7, cap: float = np.inf) -> CostTraces:
+    """c_i(t), c_ij(t) ~ U(0,1) (paper §V-A 'synthetic costs')."""
+    return CostTraces(
+        c_node=rng.random((T, n)),
+        c_link=rng.random((T, n, n)),
+        f_err=np.full((T, n), f_err),
+        cap_node=np.full((T, n), cap),
+        cap_link=np.full((T, n, n), cap),
+    )
+
+
+def testbed_like_costs(n: int, T: int, rng: np.random.Generator, *,
+                       f_err: float = 0.7, cap: float = np.inf,
+                       medium: str = "wifi") -> CostTraces:
+    """Correlated compute/link costs emulating the paper's Pi testbed.
+
+    ``medium``: "wifi" links are slower & noisier than "lte" (paper Fig. 8
+    finds WiFi skews toward discarding because transfer costs are higher).
+    """
+    quality = rng.random(n)  # latent device quality: 0 = fast, 1 = slow
+    c_node = _minmax(0.7 * quality[None, :] + 0.3 * _ar1(rng, T, (n,)))
+    link_base = 0.5 * (quality[None, :, None] + quality[None, None, :])
+    scale, noise = (1.0, 0.25) if medium == "wifi" else (0.6, 0.12)
+    c_link = _minmax(link_base + noise * _ar1(rng, T, (n, n))) * scale
+    return CostTraces(
+        c_node=c_node,
+        c_link=c_link,
+        f_err=np.full((T, n), f_err),
+        cap_node=np.full((T, n), cap),
+        cap_link=np.full((T, n, n), cap),
+    )
+
+
+def with_capacity(traces: CostTraces, cap_node: float,
+                  cap_link: float | None = None) -> CostTraces:
+    return dataclasses.replace(
+        traces,
+        cap_node=np.full_like(traces.cap_node, cap_node),
+        cap_link=np.full_like(traces.cap_link,
+                              cap_link if cap_link is not None else cap_node),
+    )
+
+
+def ici_costs(n: int, T: int, *, bytes_per_point: float,
+              link_bw: float = 50e9, chip_flops: float = 197e12,
+              flops_per_point: float = 1e9,
+              speed_factors: np.ndarray | None = None,
+              f_err: float = 0.7) -> CostTraces:
+    """Production-mesh cost source: per-datapoint seconds on ICI / MXU.
+
+    ``speed_factors`` (n,) models heterogeneous effective throughput
+    (e.g. co-tenancy, thermal throttling, stragglers — Thm 2's regime).
+    """
+    sf = np.ones(n) if speed_factors is None else np.asarray(speed_factors)
+    c_node = np.tile(flops_per_point / (chip_flops * sf), (T, 1))
+    c_link = np.full((T, n, n), bytes_per_point / link_bw)
+    return CostTraces(
+        c_node=c_node, c_link=c_link,
+        f_err=np.full((T, n), f_err),
+        cap_node=np.full((T, n), np.inf),
+        cap_link=np.full((T, n, n), np.inf),
+    )
+
+
+def effective_link_costs(traces: CostTraces, f_shift: bool = False
+                         ) -> np.ndarray:
+    """Paper §IV-A2: with the linear error model, redefining
+    c_ij(t) <- c_ij(t) + f_i(t) - f_j(t+1) folds the offload terms of the
+    error cost into the transmission cost."""
+    if not f_shift:
+        return traces.c_link
+    T, n = traces.c_node.shape
+    f = traces.f_err
+    f_next = np.concatenate([f[1:], f[-1:]], axis=0)
+    return traces.c_link + f[:, :, None] - f_next[:, None, :]

@@ -1,0 +1,59 @@
+"""Imperfect-information estimation (paper §IV-A / §V-A).
+
+Divide the horizon T into L windows T_1..T_L; within window l, the
+optimizer sees the time-AVERAGED observations of D_i(t), c_i(t), c_ij(t),
+C_i(t) from window l−1 (window 0 uses uninformative priors). The plan
+solved on estimated traces is then executed — and costed — on the true
+traces (settings C and E in Table III).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.costs import CostTraces
+
+
+def window_bounds(T: int, L: int) -> list[tuple[int, int]]:
+    edges = np.linspace(0, T, L + 1).astype(int)
+    return [(int(edges[i]), int(edges[i + 1])) for i in range(L)]
+
+
+def _window_avg(arr: np.ndarray, T: int, L: int, prior: float) -> np.ndarray:
+    out = np.empty_like(arr, dtype=float)
+    bounds = window_bounds(T, L)
+    for l, (a, b) in enumerate(bounds):
+        if l == 0:
+            out[a:b] = prior
+        else:
+            pa, pb = bounds[l - 1]
+            out[a:b] = arr[pa:pb].mean(axis=0, keepdims=True)
+    return out
+
+
+def estimate_traces(traces: CostTraces, L: int = 5,
+                    prior: float = 0.5) -> CostTraces:
+    T = traces.T
+    cap_prior = float(np.nanmean(np.where(np.isfinite(traces.cap_node),
+                                          traces.cap_node, np.nan)))
+    if not np.isfinite(cap_prior):
+        cap_prior = 1e12
+    return CostTraces(
+        c_node=_window_avg(traces.c_node, T, L, prior),
+        c_link=_window_avg(traces.c_link, T, L, prior),
+        f_err=_window_avg(traces.f_err, T, L, prior),
+        cap_node=np.where(np.isfinite(traces.cap_node),
+                          _window_avg(np.where(np.isfinite(traces.cap_node),
+                                               traces.cap_node, cap_prior),
+                                      T, L, cap_prior),
+                          np.inf),
+        cap_link=traces.cap_link.copy(),  # links observed passively
+    )
+
+
+def estimate_counts(D: np.ndarray, L: int = 5) -> np.ndarray:
+    """Window-averaged data-arrival estimates D̂_i(t)."""
+    T = D.shape[0]
+    prior = float(D.mean()) if D.size else 1.0
+    return _window_avg(D, T, L, prior)

@@ -1,0 +1,299 @@
+"""The paper's data-movement optimization (5)–(9).
+
+Decision variables per round t: ``s[t,i,j]`` — fraction of data collected
+at device i offloaded to device j (``s[t,i,i]`` = processed locally);
+``r[t,i]`` — fraction discarded. Conservation: r + Σ_j s = 1 (eq. 8);
+graph support (eq. 7); node/link capacities (eq. 9).
+
+Solvers:
+
+* ``greedy_linear``   — Theorem 3 closed form for the linear discard cost
+  f_i(t)·D_i(t)·r_i(t): each datapoint takes the least-marginal-cost option
+  among {process: c_i(t), offload→k: c_ik(t)+c_k(t+1), discard: f_i(t)}
+  with k = argmin_j c_ij(t)+c_j(t+1) over out-neighbors. O(T·n²).
+* ``repair_capacities`` — Theorem 6's guidance: when expected violations
+  are few, locally repair the greedy solution (cap link transfers, spill
+  overflow to the node's next-best option) instead of a full re-solve.
+* ``solve_convex``    — the general convex program with the 1/√G_i error
+  cost (Lemma 1), via masked-softmax parametrization + Adam in pure JAX
+  (interior-point-free; n·T can reach 10⁴+ variables). Capacities enter
+  as quadratic hinge penalties.
+* ``theorem4_closed_form`` — hierarchical-topology closed form (Thm 4).
+
+All solvers return a :class:`MovementPlan`; ``plan_cost`` evaluates the
+paper's objective decomposition (process / transfer / discard-error),
+which benchmarks/table3..table4 consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import CostTraces
+
+
+@dataclasses.dataclass
+class MovementPlan:
+    s: np.ndarray  # (T, n, n)
+    r: np.ndarray  # (T, n)
+
+    def processed(self, D: np.ndarray) -> np.ndarray:
+        """G[t,i] = s_ii(t)·D_i(t) + Σ_{j≠i} s_ji(t-1)·D_j(t-1)  (eq. 6)."""
+        T, n = self.r.shape
+        G = np.einsum("tii,ti->ti", self.s, D).astype(float).copy()
+        s_off = self.s * (1.0 - np.eye(n))[None]
+        inc = np.einsum("tji,tj->ti", s_off, D)   # arrives at t+1
+        G[1:] += inc[:-1]
+        return G
+
+    def check(self, adj: np.ndarray, atol: float = 1e-5):
+        T, n = self.r.shape
+        assert np.all(self.s >= -atol) and np.all(self.r >= -atol)
+        total = self.r + self.s.sum(axis=2)
+        assert np.allclose(total, 1.0, atol=1e-4), total
+        offdiag = self.s * (1 - np.eye(n))[None]
+        adj_t = adj if adj.ndim == 3 else np.broadcast_to(adj, (T, n, n))
+        assert np.all(offdiag[~adj_t] <= atol), "offload over missing link"
+
+
+def no_movement_plan(T: int, n: int) -> MovementPlan:
+    """Setting A: offloading and discarding disabled (G_i = D_i)."""
+    s = np.tile(np.eye(n)[None], (T, 1, 1))
+    return MovementPlan(s=s, r=np.zeros((T, n)))
+
+
+def _adj_t(adj: np.ndarray, T: int) -> np.ndarray:
+    return adj if adj.ndim == 3 else np.broadcast_to(adj, (T, *adj.shape))
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3: greedy for linear discard cost
+# ---------------------------------------------------------------------------
+
+
+def greedy_linear(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
+    T, n = traces.c_node.shape
+    adj3 = _adj_t(adj, T)
+    s = np.zeros((T, n, n))
+    r = np.zeros((T, n))
+    for t in range(T):
+        c_next = traces.c_node[min(t + 1, T - 1)]          # c_j(t+1)
+        eff = traces.c_link[t] + c_next[None, :]           # (n, n): i -> j
+        eff = np.where(adj3[t], eff, np.inf)
+        if t == T - 1:
+            eff[:] = np.inf    # offloaded data could not be processed in-horizon
+        np.fill_diagonal(eff, np.inf)
+        k = np.argmin(eff, axis=1)                         # best neighbor
+        off_cost = eff[np.arange(n), k]
+        proc_cost = traces.c_node[t]
+        disc_cost = traces.f_err[t]
+        choice = np.argmin(np.stack([proc_cost, off_cost, disc_cost]), axis=0)
+        for i in range(n):
+            if choice[i] == 0:
+                s[t, i, i] = 1.0
+            elif choice[i] == 1:
+                s[t, i, k[i]] = 1.0
+            else:
+                r[t, i] = 1.0
+    return MovementPlan(s=s, r=r)
+
+
+def repair_capacities(plan: MovementPlan, traces: CostTraces,
+                      adj: np.ndarray, D: np.ndarray) -> MovementPlan:
+    """Local repair of capacity violations (Theorem 6 guidance).
+
+    Forward pass over t: (1) clip each link transfer to C_ij; (2) clip the
+    receiving node's incoming volume to its residual capacity at t+1;
+    spilled fractions revert at the SOURCE to its next-best option
+    (process locally if c_i ≤ f_i and capacity remains, else discard).
+    """
+    T, n = plan.r.shape
+    adj3 = _adj_t(adj, T)
+    s = plan.s.copy()
+    r = plan.r.copy()
+    for t in range(T):
+        Dt = D[t]
+        # local processing this round from s_ii(t) plus arrivals from t-1
+        arrivals = (s[t - 1] * D[t - 1][:, None]).sum(0) - \
+            np.diag(s[t - 1]) * D[t - 1] if t > 0 else np.zeros(n)
+        # (1) link capacity
+        for i in range(n):
+            for j in np.nonzero(adj3[t][i])[0]:
+                if i == j or s[t, i, j] == 0:
+                    continue
+                cap = traces.cap_link[t, i, j]
+                if s[t, i, j] * Dt[i] > cap:
+                    spill = s[t, i, j] - cap / max(Dt[i], 1e-12)
+                    s[t, i, j] -= spill
+                    _revert(s, r, t, i, spill, traces, Dt, arrivals)
+        # (2) node capacity of receivers at t+1 (arrivals processed then)
+        if t + 1 < T:
+            inc = (s[t] * Dt[:, None]).sum(0) - np.diag(s[t]) * Dt
+            local_next = np.diag(s[t + 1]) * D[t + 1]
+            over = inc + local_next - traces.cap_node[t + 1]
+            for j in np.nonzero(over > 1e-9)[0]:
+                senders = [i for i in range(n)
+                           if i != j and s[t, i, j] * Dt[i] > 0]
+                excess = over[j]
+                for i in senders:
+                    if excess <= 1e-12:
+                        break
+                    vol = s[t, i, j] * Dt[i]
+                    cut = min(vol, excess)
+                    spill = cut / max(Dt[i], 1e-12)
+                    s[t, i, j] -= spill
+                    excess -= cut
+                    _revert(s, r, t, i, spill, traces, Dt, arrivals)
+        # (3) own node capacity at t for s_ii
+        G_now = np.diag(s[t]) * Dt + arrivals
+        over = G_now - traces.cap_node[t]
+        for i in np.nonzero(over > 1e-9)[0]:
+            cut = min(np.diag(s[t])[i] * Dt[i], over[i])
+            spill = cut / max(Dt[i], 1e-12)
+            s[t, i, i] -= spill
+            r[t, i] += spill
+    return MovementPlan(s=s, r=r)
+
+
+def _revert(s, r, t, i, spill, traces, Dt, arrivals):
+    """Send a spilled fraction back to i's next-best option."""
+    cap_left = traces.cap_node[t, i] - (s[t, i, i] * Dt[i] + arrivals[i])
+    if (traces.c_node[t, i] <= traces.f_err[t, i]
+            and cap_left >= spill * Dt[i]):
+        s[t, i, i] += spill
+    else:
+        r[t, i] += spill
+
+
+# ---------------------------------------------------------------------------
+# General convex solver (1/sqrt error cost, Lemma 1)
+# ---------------------------------------------------------------------------
+
+
+def solve_convex(traces: CostTraces, adj: np.ndarray, D: np.ndarray, *,
+                 error_model: str = "sqrt", gamma: float = 1.0,
+                 iters: int = 800, lr: float = 0.05,
+                 capacity_penalty: float = 50.0,
+                 seed: int = 0) -> MovementPlan:
+    """Masked-softmax parametrization of [s | r] + Adam (pure JAX).
+
+    error_model: "sqrt" (f·γ/√G), "neg_G" (−f·G), "discard" (f·D·r).
+    """
+    T, n = traces.c_node.shape
+    adj3 = _adj_t(adj, T)
+    mask = np.concatenate(
+        [adj3 | np.eye(n, dtype=bool)[None], np.ones((T, n, 1), bool)],
+        axis=2).copy()                                     # [s_ij | r_i]
+    # no off-horizon offloading in the final round
+    mask[T - 1, :, :n] &= np.eye(n, dtype=bool)
+    mask_j = jnp.asarray(mask)
+    c_node = jnp.asarray(traces.c_node)
+    c_link = jnp.asarray(traces.c_link)
+    f_err = jnp.asarray(traces.f_err)
+    cap_node = jnp.asarray(np.minimum(traces.cap_node, 1e12))
+    cap_link = jnp.asarray(np.minimum(traces.cap_link, 1e12))
+    Dj = jnp.asarray(D, jnp.float32)
+
+    def unpack(z):
+        z = jnp.where(mask_j, z, -jnp.inf)
+        p = jax.nn.softmax(z, axis=2)                      # rows sum to 1
+        s = p[:, :, :n]
+        r = p[:, :, n]
+        return s, r
+
+    def G_of(s):
+        G = jnp.einsum("tii,ti->ti", s, Dj)
+        s_off = s * (1.0 - jnp.eye(n))[None]
+        inc = jnp.einsum("tji,tj->ti", s_off, Dj)
+        return G.at[1:].add(inc[:-1])
+
+    def objective(z):
+        s, r = unpack(z)
+        G = G_of(s)
+        off = s * (1 - jnp.eye(n))[None]
+        proc = jnp.sum(G * c_node)
+        trans = jnp.sum(off * Dj[:, :, None] * c_link)
+        if error_model == "sqrt":
+            err = jnp.sum(f_err * gamma / jnp.sqrt(G + 1e-3))
+        elif error_model == "neg_G":
+            err = -jnp.sum(f_err * G)
+        else:  # "discard"
+            err = jnp.sum(f_err * Dj * r)
+        pen = (jnp.sum(jax.nn.relu(G - cap_node) ** 2)
+               + jnp.sum(jax.nn.relu(off * Dj[:, :, None] - cap_link) ** 2))
+        return proc + trans + err + capacity_penalty * pen
+
+    z = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (T, n, n + 1))
+    m = jnp.zeros_like(z)
+    v = jnp.zeros_like(z)
+    grad_fn = jax.jit(jax.grad(objective))
+
+    @jax.jit
+    def step(carry, i):
+        z, m, v = carry
+        g = grad_fn(z)
+        g = jnp.where(mask_j, g, 0.0)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9 ** (i + 1))
+        vh = v / (1 - 0.999 ** (i + 1))
+        z = z - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        return (z, m, v), None
+
+    (z, _, _), _ = jax.lax.scan(step, (z, m, v), jnp.arange(iters))
+    s, r = unpack(z)
+    return MovementPlan(s=np.asarray(s, float), r=np.asarray(r, float))
+
+
+# ---------------------------------------------------------------------------
+# Theorem 4: hierarchical closed form
+# ---------------------------------------------------------------------------
+
+
+def theorem4_closed_form(c: np.ndarray, c_server: float, c_t: float,
+                         gamma: float, D: np.ndarray
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """n devices offloading to an edge server (node n+1).
+
+    Returns (r*, s*) per eqs. (13)-(14):
+      r_i* = 1 − (γ/2c_i)^{2/3}/D_i − s_i,
+      s_i* = (γ/(2(c_{n+1}+c_t)))^{2/3} / Σ_j D_j.
+    """
+    s_star = (gamma / (2 * (c_server + c_t))) ** (2.0 / 3.0) / D.sum()
+    s = np.full_like(c, s_star)
+    r = 1.0 - (gamma / (2 * c)) ** (2.0 / 3.0) / D - s
+    return np.clip(r, 0.0, 1.0), np.clip(s, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Objective evaluation (Tables III / IV)
+# ---------------------------------------------------------------------------
+
+
+def plan_cost(plan: MovementPlan, traces: CostTraces, D: np.ndarray, *,
+              error_model: str = "discard", gamma: float = 1.0) -> dict:
+    T, n = plan.r.shape
+    G = plan.processed(D)
+    off = plan.s * (1 - np.eye(n))[None]
+    proc = float(np.sum(G * traces.c_node))
+    trans = float(np.sum(off * D[:, :, None] * traces.c_link))
+    if error_model == "sqrt":
+        disc = float(np.sum(traces.f_err * gamma / np.sqrt(G + 1e-3)))
+    elif error_model == "neg_G":
+        disc = float(-np.sum(traces.f_err * G))
+    else:
+        disc = float(np.sum(traces.f_err * D * plan.r))
+    total_data = float(D.sum())
+    total = proc + trans + disc
+    return {"process": proc, "transfer": trans, "discard": disc,
+            "total": total,
+            "unit": total / max(total_data, 1e-9),
+            "data_total": total_data,
+            "moved_rate": float((off.sum(2) * D).sum() / max(D.sum(), 1e-9)
+                                + (plan.r * D).sum() / max(D.sum(), 1e-9)),
+            "processed_frac": float(G.sum() / max(D.sum(), 1e-9)),
+            "discarded_frac": float((plan.r * D).sum() / max(D.sum(), 1e-9))}

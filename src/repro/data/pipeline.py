@@ -1,0 +1,127 @@
+"""Fog data pipeline (paper §V-A):
+
+* per-device Poisson arrivals, mean |D_V|/(nT) per round
+* i.i.d. (uniform w/o replacement from the global pool) or non-i.i.d.
+  (each device restricted to a random 5 of 10 labels) collection
+* application of a MovementPlan to the physical sample streams: offloaded
+  samples travel one round (arrive at t+1), discarded samples vanish —
+  this is the data plane matching movement.py's decision plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.movement import MovementPlan
+
+
+@dataclasses.dataclass
+class FogStreams:
+    """collected[t][i] -> (idx array of global sample ids)."""
+
+    collected: list[list[np.ndarray]]
+    n: int
+    T: int
+
+
+def poisson_streams(n: int, T: int, y: np.ndarray, *, iid: bool = True,
+                    labels_per_device: int = 5, n_classes: int = 10,
+                    rng: np.random.Generator | None = None,
+                    mean_per_round: float | None = None) -> FogStreams:
+    rng = rng or np.random.default_rng(0)
+    N = len(y)
+    mean = mean_per_round or N / (n * T)
+    device_labels = [rng.choice(n_classes, labels_per_device, replace=False)
+                     for _ in range(n)]
+    by_label = {c: np.nonzero(y == c)[0] for c in range(n_classes)}
+    collected: list[list[np.ndarray]] = []
+    for t in range(T):
+        row = []
+        for i in range(n):
+            k = rng.poisson(mean)
+            if iid:
+                idx = rng.choice(N, size=min(k, N), replace=False)
+            else:
+                pool = np.concatenate([by_label[c] for c in device_labels[i]])
+                idx = rng.choice(pool, size=min(k, len(pool)), replace=False)
+            row.append(idx.astype(np.int64))
+        collected.append(row)
+    return FogStreams(collected=collected, n=n, T=T)
+
+
+def counts(streams: FogStreams) -> np.ndarray:
+    """D[t,i] = |D_i(t)|."""
+    return np.array([[len(ix) for ix in row] for row in streams.collected],
+                    dtype=float)
+
+
+def apply_movement(streams: FogStreams, plan: MovementPlan,
+                   rng: np.random.Generator | None = None
+                   ) -> list[list[np.ndarray]]:
+    """Route physical samples per the plan.
+
+    Returns processed[t][i] — global sample ids device i processes at
+    round t (= retained local share + arrivals offloaded at t−1).
+    Fractions are realized by randomized rounding of contiguous splits.
+    """
+    rng = rng or np.random.default_rng(1)
+    n, T = streams.n, streams.T
+    processed = [[np.empty(0, np.int64) for _ in range(n)] for _ in range(T)]
+    for t in range(T):
+        for i in range(n):
+            idx = streams.collected[t][i]
+            if len(idx) == 0:
+                continue
+            idx = rng.permutation(idx)
+            fracs = np.concatenate([plan.s[t, i], [plan.r[t, i]]])
+            fracs = np.clip(fracs, 0, None)
+            fracs = fracs / max(fracs.sum(), 1e-12)
+            cuts = np.floor(np.cumsum(fracs) * len(idx) + 1e-9).astype(int)
+            start = 0
+            for j, end in enumerate(cuts[:-1]):  # last bucket = discard
+                part = idx[start:end]
+                start = end
+                if len(part) == 0:
+                    continue
+                if j == i:
+                    processed[t][i] = np.concatenate([processed[t][i], part])
+                elif t + 1 < T:
+                    processed[t + 1][j] = np.concatenate(
+                        [processed[t + 1][j], part])
+    return processed
+
+
+def label_similarity(label_multisets: list[np.ndarray],
+                     n_classes: int = 10) -> float:
+    """Average pairwise multiset label overlap (paper Fig. 4b):
+    s_ij = |Y_i ∩ Y_j| / min(|Y_i|, |Y_j|)."""
+    hists = [np.bincount(l, minlength=n_classes) for l in label_multisets]
+    sims = []
+    n = len(hists)
+    for i in range(n):
+        for j in range(i + 1, n):
+            lo = np.minimum(hists[i], hists[j]).sum()
+            denom = min(hists[i].sum(), hists[j].sum())
+            if denom > 0:
+                sims.append(lo / denom)
+    return float(np.mean(sims)) if sims else 0.0
+
+
+def pad_batches(processed_t: list[np.ndarray], x: np.ndarray,
+                y: np.ndarray, max_points: int):
+    """Stack per-device variable-size batches into padded arrays.
+
+    Returns (xb (n, P, ...), yb (n, P), w (n, P) weight mask)."""
+    n = len(processed_t)
+    P = max_points
+    xb = np.zeros((n, P, *x.shape[1:]), x.dtype)
+    yb = np.zeros((n, P), np.int32)
+    w = np.zeros((n, P), np.float32)
+    for i, idx in enumerate(processed_t):
+        k = min(len(idx), P)
+        if k:
+            xb[i, :k] = x[idx[:k]]
+            yb[i, :k] = y[idx[:k]]
+            w[i, :k] = 1.0
+    return xb, yb, w

@@ -1,0 +1,77 @@
+"""FedAvg with τ local steps at production scale (paper §III-B on the
+mesh runtime).
+
+Between aggregations each data shard (= fog device group) takes τ local
+optimizer steps on its own routed data WITHOUT cross-shard gradient
+synchronization; at round end, parameters are synchronized with the
+H_i-weighted average (eq. 4), H_i = Σ_t (processed sample weights).
+
+Divergent per-shard parameters cannot be expressed with replicated pjit
+params, so the round runs under ``shard_map`` over the data axis:
+parameters enter replicated, diverge inside the round, and leave
+replicated again (the weighted ``psum``) — exactly FedAvg semantics with
+no materialized per-device parameter copies outside the round.
+
+The model axis stays size 1 inside this path (fog FedAvg is a
+data-parallel technique; tensor parallelism composes by nesting meshes —
+documented limitation, DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.optim import optimizers as opt_lib
+
+
+def make_fedavg_round(cfg, optimizer: opt_lib.Optimizer, tau: int,
+                      mesh, data_axis: str = "data"):
+    """Returns round_fn(params, opt_state, batches) -> (params, opt_state,
+    metrics).
+
+    ``batches`` — pytree of arrays with leading dims (tau, global_batch,
+    ...); each shard consumes its slice of every per-step batch.
+    """
+
+    def local_round(params, opt_state, batches):
+        # Inside shard_map: ``batches`` leaves are (tau, local_batch, ...)
+        def step(carry, mb):
+            p, s, h = carry
+
+            def lf(q):
+                loss, _ = T.loss_fn(q, mb, cfg)
+                return loss
+
+            loss, grads = jax.value_and_grad(lf)(p)
+            grads, _ = opt_lib.clip_by_global_norm(grads, 1.0)
+            ups, s = optimizer.update(grads, s, p)
+            p = opt_lib.apply_updates(p, ups)
+            h = h + mb["weights"].sum()          # H_i accumulation
+            return (p, s, h), loss
+
+        (params, opt_state, H), losses = jax.lax.scan(
+            step, (params, opt_state, jnp.float32(0.0)), batches)
+
+        # eq. (4): H_i-weighted parameter average across shards
+        H_tot = jax.lax.psum(H, data_axis)
+        w = H / jnp.maximum(H_tot, 1e-9)
+        params = jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(x * w, data_axis), params)
+        # moments follow the same weighted average (standard FedOpt choice)
+        opt_state = jax.tree_util.tree_map(
+            lambda x: (jax.lax.psum(x * w, data_axis)
+                       if jnp.issubdtype(x.dtype, jnp.floating) and x.ndim > 0
+                       else x),
+            opt_state)
+        return params, opt_state, losses.mean()
+
+    batch_spec = P(None, data_axis)  # (tau, batch, ...)
+    return jax.jit(jax.shard_map(
+        local_round, mesh=mesh,
+        in_specs=(P(), P(), batch_spec),
+        out_specs=(P(), P(), P()),
+        check_vma=False))

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the Theorem-3 offload decision rule.
+
+For large fog networks (n up to 10⁴+ shards in the production mapping)
+the per-round decision is an O(n²) masked min-plus reduction:
+    k_i = argmin_{j : (i,j)∈E} ( c_ij + c_j(t+1) ),
+followed by the 3-way marginal-cost comparison {process, offload,
+discard}. The (n × n) effective-cost matrix is streamed through VMEM in
+(bn × bn) tiles; a running (min, argmin) per row is carried across the
+column-tile grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INF = 3.4e38  # python float: jnp scalars would be captured as consts
+
+
+def _kernel(clink_ref, cnext_ref, cnode_ref, ferr_ref, adj_ref,
+            choice_ref, bestj_ref, bestc_ref, min_sc, arg_sc, *,
+            bn: int, ncols: int):
+    ri = pl.program_id(0)
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        min_sc[...] = jnp.full_like(min_sc, INF)
+        arg_sc[...] = jnp.zeros_like(arg_sc)
+
+    eff = (clink_ref[...].astype(jnp.float32)
+           + cnext_ref[0][None, :].astype(jnp.float32))      # (bn, bn)
+    row = ri * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
+    col = cj * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1)
+    ok = adj_ref[...] & (row != col)
+    eff = jnp.where(ok, eff, INF)
+
+    tile_min = eff.min(axis=1)
+    tile_arg = (cj * bn + jnp.argmin(eff, axis=1)).astype(jnp.int32)
+    better = tile_min < min_sc[...]
+    arg_sc[...] = jnp.where(better, tile_arg, arg_sc[...])
+    min_sc[...] = jnp.where(better, tile_min, min_sc[...])
+
+    @pl.when(cj == ncols - 1)
+    def _finalize():
+        proc = cnode_ref[0].astype(jnp.float32)
+        disc = ferr_ref[0].astype(jnp.float32)
+        off = min_sc[...]
+        # 3-way argmin with ties resolved process < offload < discard
+        best = jnp.minimum(jnp.minimum(proc, off), disc)
+        choice = jnp.where(proc <= best, 0,
+                           jnp.where(off <= best, 1, 2)).astype(jnp.int32)
+        choice_ref[0, ...] = choice
+        bestj_ref[0, ...] = arg_sc[...]
+        bestc_ref[0, ...] = best
+
+
+def offload_greedy(c_link, c_next, c_node, f_err, adj, *, bn: int = 128,
+                   interpret: bool | None = None):
+    """Theorem 3 rule. c_link (n,n); c_next,c_node,f_err (n,); adj (n,n)
+    bool. Returns (choice (n,) int32, best_j (n,) int32, best_cost (n,)).
+
+    Matches ``ref.offload_greedy_ref`` (up to argmin tie order).
+    """
+    n = c_node.shape[0]
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+    nb = n // bn
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    kern = functools.partial(_kernel, bn=bn, ncols=nb)
+    choice, bestj, bestc = pl.pallas_call(
+        kern,
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda ri, cj: (ri, cj)),  # c_link
+            pl.BlockSpec((1, bn), lambda ri, cj: (0, cj)),    # c_next
+            pl.BlockSpec((1, bn), lambda ri, cj: (0, ri)),    # c_node
+            pl.BlockSpec((1, bn), lambda ri, cj: (0, ri)),    # f_err
+            pl.BlockSpec((bn, bn), lambda ri, cj: (ri, cj)),  # adj
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda ri, cj: (0, ri)),
+            pl.BlockSpec((1, bn), lambda ri, cj: (0, ri)),
+            pl.BlockSpec((1, bn), lambda ri, cj: (0, ri)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bn,), jnp.float32),
+                        pltpu.VMEM((bn,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(c_link, c_next[None, :], c_node[None, :], f_err[None, :], adj)
+    return choice[0], bestj[0], bestc[0]

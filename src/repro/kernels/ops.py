@@ -1,0 +1,38 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes in Python for correctness validation; on TPU they compile to
+Mosaic. ``use_pallas=False`` falls back to the pure-jnp reference (the
+oracle), which is also what the model code uses by default on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.offload_greedy import offload_greedy
+from repro.kernels.ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas"))
+def attention(q, k, v, *, causal=True, window=None, use_pallas=True):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd(xdt, a, Bm, Cm, *, chunk=128, use_pallas=True):
+    if use_pallas:
+        return ssd_scan(xdt, a, Bm, Cm, chunk=chunk)
+    return ref.ssd_scan_ref(xdt, a, Bm, Cm)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def greedy_decision(c_link, c_next, c_node, f_err, adj, *, use_pallas=True):
+    if use_pallas:
+        return offload_greedy(c_link, c_next, c_node, f_err, adj)
+    return ref.offload_greedy_ref(c_link, c_next, c_node, f_err, adj)

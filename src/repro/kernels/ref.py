@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+the per-kernel tests sweep against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """q (B,H,Sq,hd); k,v (B,KH,Sk,hd); GQA via H % KH == 0.
+
+    Returns (B,H,Sq,hd) in q.dtype; softmax in f32.
+    """
+    B, H, Sq, hd = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    r = H // KH
+    kx = jnp.repeat(k, r, axis=1)
+    vx = jnp.repeat(v, r, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / np.sqrt(hd)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (can happen with tiny windows) -> zeros, not nan
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ssd_scan_ref(xdt, a, Bm, Cm) -> jax.Array:
+    """Sequential SSD recurrence oracle.
+
+    xdt (B,H,S,P) inputs pre-scaled by dt; a (B,H,S) log-decay (=dt*A);
+    Bm, Cm (B,S,N) shared across heads. Returns y (B,H,S,P) f32:
+        h_t = exp(a_t)·h_{t-1} + B_t ⊗ x_t;  y_t = C_t·h_t
+    """
+    B_, H, S, P = xdt.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = h_inp = inp
+        h = h * jnp.exp(a_t)[:, :, None, None] + \
+            x_t[..., None] * b_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    xs = (xdt.astype(jnp.float32).transpose(2, 0, 1, 3),
+          a.astype(jnp.float32).transpose(2, 0, 1),
+          Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 2, 0, 3)  # (B,H,S,P)
+
+
+def offload_greedy_ref(c_link, c_next, c_node, f_err, adj):
+    """Theorem 3 decision rule oracle.
+
+    c_link (n,n), c_next (n,) = c_j(t+1), c_node (n,) = c_i(t),
+    f_err (n,), adj (n,n) bool. Returns (choice (n,) int32 —
+    0 process / 1 offload / 2 discard, best_j (n,) int32,
+    best_cost (n,) f32).
+    """
+    n = c_node.shape[0]
+    eff = c_link + c_next[None, :]
+    eff = jnp.where(adj, eff, jnp.inf)
+    eff = jnp.where(jnp.eye(n, dtype=bool), jnp.inf, eff)
+    best_j = jnp.argmin(eff, axis=1).astype(jnp.int32)
+    off = eff[jnp.arange(n), best_j]
+    stacked = jnp.stack([c_node, off, f_err])
+    choice = jnp.argmin(stacked, axis=0).astype(jnp.int32)
+    return choice, best_j, jnp.min(stacked, axis=0)

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input shape × mesh)
+and extract roofline terms from the compiled artifact.
+
+This proves the distribution config is coherent without real hardware:
+sharding mismatches, unsupported collectives, or absurd per-device memory
+all surface here. The container has one real CPU device; the two lines
+ABOVE (before any other import!) give jax 512 placeholder devices so
+``jax.make_mesh`` can build the production meshes.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --multi-pod
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import all_archs, get_config
+from repro.launch import steps as St
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.module import abstract_params, logical_axes, param_count
+from repro.models.module import Spec
+from repro.optim import optimizers as opt_lib
+
+# TPU v5e hardware model (targets; container runs XLA:CPU for lowering)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+             "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+             "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+             "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+# bytes-moved-per-device multiplier on the RESULT shape (ring algorithms;
+# methodology note in EXPERIMENTS.md §Roofline)
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    per_op: dict[str, dict] = {}
+    done_seen = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op = m.group(1), m.group(2)
+        full = m.group(0)
+        if "-done(" in full:
+            continue  # counted at -start
+        b = _shape_bytes(type_str)
+        d = per_op.setdefault(op, {"count": 0, "result_bytes": 0})
+        d["count"] += 1
+        d["result_bytes"] += b
+    moved = sum(_MULT[op] * d["result_bytes"] for op, d in per_op.items())
+    return {"per_op": per_op, "moved_bytes_per_device": moved}
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) — active discounts MoE experts by topk/E."""
+    specs = T.specs(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, Spec))
+    total = active = 0
+    for path, s in flat:
+        n = int(np.prod(s.shape))
+        total += n
+        keystr = jax.tree_util.keystr(path)
+        if "moe" in keystr and "router" not in keystr and cfg.num_experts:
+            active += n * cfg.experts_per_token // cfg.num_experts
+        else:
+            active += n
+    return total, active
+
+
+def build_lowered(arch: str, shape_name: str, mesh, optimizer="adamw",
+                  variant: dict | None = None):
+    """``variant`` — perf-iteration knobs (EXPERIMENTS.md §Perf):
+    moe_groups, ssm_streaming (config overrides); microbatches, zero1
+    (step/sharding options)."""
+    variant = variant or {}
+    cfg0 = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    cfg = St.config_for_shape(cfg0, shape)
+    overrides = {k: variant[k]
+                 for k in ("moe_groups", "ssm_streaming", "moe_pad_experts")
+                 if k in variant}
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    pshard = St.param_shardings(cfg, mesh)
+    aparams = abstract_params(T.specs(cfg))
+
+    if shape.kind == "train":
+        opt = opt_lib.get_optimizer(optimizer, 1e-4)
+        aopt = jax.eval_shape(opt.init, aparams)
+        oshard = St.opt_state_shardings(aopt, pshard, mesh,
+                                        zero1=variant.get("zero1", False))
+        binput = St.input_specs(cfg, shape)
+        bshard = St.batch_shardings(binput, mesh)
+        acc_sh = (St.accum_shardings(aparams, pshard, mesh)
+                  if variant.get("zero2") else None)
+        step = St.make_train_step(
+            cfg, opt, microbatches=variant.get("microbatches", 1),
+            accum_shards=acc_sh)
+        jitted = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                         donate_argnums=(0, 1))
+        with mesh:
+            return jitted.lower(aparams, aopt, binput), cfg
+    if shape.kind == "prefill":
+        binput = St.input_specs(cfg, shape)
+        bshard = St.batch_shardings(binput, mesh)
+        step = St.make_prefill_step(cfg)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        with mesh:
+            return jitted.lower(aparams, binput), cfg
+    # decode
+    ios = St.input_specs(cfg, shape)
+    cshard = St.cache_shardings(cfg, shape.global_batch, shape.seq_len, mesh)
+    bshard = St.batch_shardings(ios["batch"], mesh)
+    step = St.make_decode_step(cfg)
+    jitted = jax.jit(step, in_shardings=(pshard, cshard, bshard,
+                                         jax.sharding.NamedSharding(
+                                             mesh, jax.sharding.PartitionSpec())),
+                     donate_argnums=(1,))
+    with mesh:
+        return jitted.lower(aparams, ios["cache"], ios["batch"], ios["pos"]), cfg
+
+
+def analyze(arch: str, shape_name: str, *, multi_pod: bool = False,
+            optimizer: str = "adamw", variant: dict | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    lowered, cfg = build_lowered(arch, shape_name, mesh, optimizer, variant)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+
+    coll = collective_stats(compiled.as_text())
+
+    shape = INPUT_SHAPES[shape_name]
+    total_p, active_p = count_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf_mult = 6 if shape.kind == "train" else 2
+    model_flops = mf_mult * active_p * tokens
+
+    # cost_analysis flops are per-device (post-SPMD-partition) — verified
+    # empirically in tests/test_dryrun_small.py; scale to global.
+    flops_global = flops * chips
+    bytes_global = bytes_acc * chips
+
+    compute_s = flops_global / (chips * PEAK_FLOPS)
+    memory_s = bytes_global / (chips * HBM_BW)
+    collective_s = coll["moved_bytes_per_device"] / ICI_BW
+
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    return {
+        "arch": arch, "shape": shape_name, "variant": variant or {},
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": chips, "kind": shape.kind,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "collectives": coll, "memory": mem,
+        "params_total": total_p, "params_active": active_p,
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / flops_global if flops_global else 0.0,
+        **terms, "dominant": dominant,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--out", default=None)
+    # perf-iteration knobs (§Perf)
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--pad-experts", type=int, default=0)
+    ap.add_argument("--ssm-streaming", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--zero2", action="store_true")
+    args = ap.parse_args(argv)
+    variant = {}
+    if args.moe_groups:
+        variant["moe_groups"] = args.moe_groups
+    if args.pad_experts:
+        variant["moe_pad_experts"] = args.pad_experts
+    if args.ssm_streaming:
+        variant["ssm_streaming"] = True
+    if args.microbatches:
+        variant["microbatches"] = args.microbatches
+    if args.zero1:
+        variant["zero1"] = True
+    if args.zero2:
+        variant["zero1"] = True
+        variant["zero2"] = True
+
+    combos = []
+    archs = all_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    ok = True
+    outf = open(args.out, "a") if args.out else None
+    for a, s, mp in combos:
+        tag = f"{a} × {s} × {'2x16x16' if mp else '16x16'}"
+        try:
+            r = analyze(a, s, multi_pod=mp, optimizer=args.optimizer,
+                        variant=variant or None)
+            line = json.dumps(r)
+            print(f"PASS {tag}: dominant={r['dominant']} "
+                  f"compute={r['compute_s']:.4g}s memory={r['memory_s']:.4g}s "
+                  f"collective={r['collective_s']:.4g}s "
+                  f"compile={r['compile_s']}s", flush=True)
+            if outf:
+                outf.write(line + "\n")
+                outf.flush()
+        except Exception as e:
+            ok = False
+            print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+            if outf:
+                outf.write(json.dumps({"arch": a, "shape": s,
+                                       "multi_pod": mp,
+                                       "error": f"{type(e).__name__}: {e}"}) + "\n")
+                outf.flush()
+    if outf:
+        outf.close()
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

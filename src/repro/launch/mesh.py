@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — device count is locked at first jax init,
+and only ``dryrun.py`` forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (=256 chips, one v5e pod) or 2x16x16 (=512 chips, two pods).
+
+    Axes: "data" (batch / fog-device axis), "model" (tensor parallel),
+    plus an outer "pod" axis in the multi-pod case (batch is sharded over
+    ("pod","data") — see distributed/sharding.py).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many host devices exist (tests / demos)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,221 @@
+"""Analytic roofline model per (arch × shape × mesh).
+
+Why this exists: XLA:CPU's ``compiled.cost_analysis()`` counts a
+``lax.scan`` body ONCE (the while-loop trip count is invisible to the HLO
+cost model) and counts one FLOP per multiply-add — verified empirically in
+EXPERIMENTS.md §Dry-run (an unrolled 2-layer model reports ~2x the scanned
+FLOPs). Since every model here scans its layer stack, the HLO numbers
+under-count by ~O(num_layers). The dry-run keeps the HLO-derived numbers
+as structural evidence (the collective schedule, per-device shapes); this
+module supplies the hardware-meaningful terms:
+
+  flops_useful   2·N_active·tokens (x3 for train) — the MFU numerator
+  flops_hw       what the implementation actually executes: padded heads,
+                 full-rectangle blocked attention, MoE capacity factor,
+                 remat recompute, SSD chunk quadratics
+  bytes_hbm      per-device HBM traffic: params + optimizer states +
+                 activation residuals (remat-aware) + KV/SSM cache
+  bytes_coll     per-device ICI traffic: grad all-reduce (train),
+                 TP activation all-reduces, MoE regroup, decode softmax
+                 reductions
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def _param_counts(cfg: ModelConfig) -> dict:
+    """Analytic parameter counts by component (matches models/*.py specs)."""
+    D, L = cfg.d_model, cfg.num_layers
+    hd = cfg.head_dim
+    out: dict[str, float] = {"embed": cfg.vocab_padded * D
+                             * (1 if cfg.tie_embeddings else 2)}
+    if cfg.pos_embed == "learned":
+        out["embed"] += cfg.max_positions * D
+
+    def attn(hp):
+        return D * hp * hd * 2 + 2 * D * cfg.num_kv_heads * hd
+
+    def mlp():
+        mult = 3 if cfg.act == "swiglu" else 2
+        return mult * D * cfg.d_ff
+
+    if cfg.family == "ssm":
+        DI, H, N, G = cfg.ssm_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+        per = 2 * D * DI + 2 * D * G * N + D * H + DI * 4 + DI + DI * D
+        out["ssm"] = L * per
+    elif cfg.family == "hybrid":
+        DI, H, N, G = cfg.ssm_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+        per = 2 * D * DI + 2 * D * G * N + D * H + DI * 4 + DI + DI * D
+        out["ssm"] = L * per
+        out["attn"] = attn(cfg.num_heads_padded)   # one shared block
+        out["mlp"] = mlp()
+    elif cfg.family == "encdec":
+        out["attn"] = (L * 2 + cfg.encoder_layers) * attn(cfg.num_heads_padded)
+        out["mlp"] = (L + cfg.encoder_layers) * mlp()
+    else:
+        out["attn"] = L * attn(cfg.num_heads_padded)
+        if cfg.num_experts:
+            out["moe"] = L * (3 * D * cfg.d_ff * cfg.num_experts
+                              + D * cfg.num_experts)
+        else:
+            out["mlp"] = L * mlp()
+    return out
+
+
+def params_total_active(cfg: ModelConfig) -> tuple[float, float]:
+    pc = _param_counts(cfg)
+    total = sum(pc.values())
+    active = total
+    if cfg.num_experts and "moe" in pc:
+        active = total - pc["moe"] * (1 - cfg.experts_per_token
+                                      / cfg.num_experts)
+    return total, active
+
+
+def _attention_flops_hw(cfg, B, S, heads) -> float:
+    """Full-rectangle blocked attention (the XLA lazy-block path computes
+    masked blocks too): 4·B·H·S·S_k·hd MACs x2 FLOPs."""
+    Sk = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    return 2.0 * 2 * B * heads * S * Sk * cfg.head_dim * 2
+
+
+def _ssd_flops(cfg, B, S) -> float:
+    l = cfg.ssm_chunk
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    nc = max(S // l, 1)
+    per_chunk = 2 * (l * l * N + l * l * P + 2 * l * N * P)  # MACs x2
+    return B * H * nc * per_chunk
+
+
+def analytic_roofline(cfg: ModelConfig, shape: InputShape,
+                      mesh_shape: tuple[int, ...]) -> dict[str, Any]:
+    chips = int(np.prod(mesh_shape))
+    model_par = mesh_shape[-1]
+    data_par = chips // model_par
+    B, S = shape.global_batch, shape.seq_len
+    total, active = params_total_active(cfg)
+    L = cfg.num_layers
+
+    if shape.kind == "decode":
+        tokens = B
+        S_ctx = min(S, cfg.sliding_window) if (
+            cfg.sliding_window and cfg.family not in ("ssm",)) else S
+    else:
+        tokens = B * S
+
+    # ---------------- FLOPs ----------------
+    fwd_mult = 2.0
+    flops_useful = fwd_mult * active * tokens
+    if shape.kind == "train":
+        flops_useful *= 3                        # fwd + 2x bwd
+
+    flops_hw = fwd_mult * active * tokens        # matmul base
+    if cfg.num_experts:                          # capacity-factor overhead
+        flops_hw += fwd_mult * tokens * _param_counts(cfg)["moe"] \
+            * cfg.experts_per_token / cfg.num_experts \
+            * (cfg.capacity_factor - 1)
+    # attention quadratics
+    if shape.kind != "decode":
+        if cfg.family == "ssm":
+            flops_hw += L * _ssd_flops(cfg, B, S)
+        elif cfg.family == "hybrid":
+            g = L // cfg.attn_every
+            flops_hw += L * _ssd_flops(cfg, B, S)
+            flops_hw += g * _attention_flops_hw(cfg, B, S,
+                                                cfg.num_heads_padded)
+        elif cfg.family == "encdec":
+            flops_hw += L * _attention_flops_hw(cfg, B, S,
+                                                cfg.num_heads_padded)
+            flops_hw += cfg.encoder_layers * _attention_flops_hw(
+                dataclasses.replace(cfg, sliding_window=None), B,
+                cfg.encoder_seq, cfg.num_heads_padded)
+            flops_hw += L * 2 * 2 * B * cfg.num_heads_padded * S \
+                * cfg.encoder_seq * cfg.head_dim * 2
+        else:
+            flops_hw += L * _attention_flops_hw(cfg, B, S,
+                                                cfg.num_heads_padded)
+    else:
+        # decode attention: q·cache per layer (linear, memory-bound)
+        if cfg.family in ("ssm", "hybrid"):
+            flops_hw += L * 2 * B * cfg.ssm_heads * cfg.ssm_headdim \
+                * cfg.ssm_state * 2
+        if cfg.family not in ("ssm",):
+            att_layers = (L // cfg.attn_every if cfg.family == "hybrid"
+                          else L)
+            flops_hw += att_layers * 2 * 2 * B * cfg.num_heads \
+                * S_ctx * cfg.head_dim * 2
+    if shape.kind == "train":
+        flops_hw *= 3
+        if cfg.remat == "full":
+            flops_hw *= 4.0 / 3.0                # one extra fwd
+
+    # ---------------- HBM bytes (per device) ----------------
+    p_dev = total / model_par                    # params sharded over model
+    if shape.kind == "train":
+        # p read + grad write/read + adam m,v fp32 r/w + p write (bf16)
+        bytes_hbm = p_dev * (2 + 2 * 2 + 4 * 4 + 2)
+        act_bytes = 2 * tokens / data_par * cfg.d_model
+        layer_io = 6 if cfg.remat == "full" else 14
+        bytes_hbm += L * layer_io * act_bytes
+        # logits in f32 (the big one at 150k+ vocab)
+        bytes_hbm += tokens / data_par * cfg.vocab_padded / model_par * 4 * 2
+    elif shape.kind == "prefill":
+        bytes_hbm = p_dev * 2 + L * 8 * (2 * tokens / data_par * cfg.d_model)
+        bytes_hbm += tokens / data_par * cfg.vocab_padded / model_par * 4
+    else:
+        bytes_hbm = p_dev * 2                    # weights stream once
+        if cfg.family in ("ssm", "hybrid"):
+            bytes_hbm += L * (B / min(B, data_par)) * cfg.ssm_heads \
+                * cfg.ssm_headdim * cfg.ssm_state * 4 * 2
+        if cfg.family not in ("ssm",):
+            att_layers = (L // cfg.attn_every if cfg.family == "hybrid"
+                          else L)
+            cache = att_layers * B * cfg.num_kv_heads * S_ctx \
+                * cfg.head_dim * 2 * 2
+            bytes_hbm += cache / chips            # batch x seq sharded
+
+    # ---------------- collective bytes (per device) ----------------
+    act_shard = (tokens / data_par) * cfg.d_model * 2   # bf16 activations
+    if shape.kind == "train":
+        # grad all-reduce over (pod x data) of each device's model shard
+        # (ring: ~2x the buffer)
+        bytes_coll = 2 * (2 * total / model_par)
+        # TP all-reduces: 2 per layer (attn out + mlp out), x3 fwd+bwd,
+        # ring 2x, each device's share of the activation
+        bytes_coll += L * 2 * 3 * 2 * act_shard / model_par
+    elif shape.kind == "prefill":
+        bytes_coll = L * 2 * 2 * act_shard / model_par
+    else:
+        att_layers = (0 if cfg.family == "ssm" else
+                      (cfg.num_layers // cfg.attn_every
+                       if cfg.family == "hybrid" else cfg.num_layers))
+        bytes_coll = att_layers * 3 * B * cfg.num_heads * cfg.head_dim * 4
+        bytes_coll += 2 * B * cfg.d_model * 2 * cfg.num_layers / model_par
+
+    return {
+        "flops_useful": flops_useful,
+        "flops_hw": flops_hw,
+        "bytes_hbm_dev": bytes_hbm,
+        "bytes_coll_dev": bytes_coll,
+        "compute_s": flops_hw / (chips * PEAK_FLOPS),
+        "compute_useful_s": flops_useful / (chips * PEAK_FLOPS),
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": bytes_coll / ICI_BW,
+        "mfu_bound": flops_useful / max(flops_hw, 1.0),
+        "params_total": total, "params_active": active,
+    }
+
+
+def dominant_term(r: dict) -> str:
+    terms = {k: r[k] for k in ("compute_s", "memory_s", "collective_s")}
+    return max(terms, key=terms.get)

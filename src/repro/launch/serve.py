@@ -1,0 +1,82 @@
+"""Batched serving demo: prefill (token-by-token cache build at this
+scale) + jitted single-token decode loop with KV/SSM cache.
+
+    python -m repro.launch.serve --arch mamba2-1.3b --batch 4 \
+        --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.models.module import init_params
+
+
+def greedy_generate(cfg, params, prompts: np.ndarray, gen: int,
+                    cache_len: int | None = None):
+    """prompts (B, P) int32; returns (tokens (B, P+gen), tok/s)."""
+    B, P = prompts.shape
+    cache_len = cache_len or (P + gen)
+    cache = init_params(T.init_cache_specs(cfg, B, cache_len),
+                        jax.random.PRNGKey(0), jnp.float32)
+    if cfg.family == "encdec":
+        frames = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        _, ck, cv = jax.jit(lambda p, f: T.encode(p, f, cfg))(params, frames)
+        cache["cross_k"] = ck
+        cache["cross_v"] = cv
+
+    @jax.jit
+    def step(params, cache, tok, pos):
+        logits, cache = T.decode_step(params, cache,
+                                      {"tokens": tok}, pos, cfg)
+        nxt = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+        return nxt.astype(jnp.int32)[:, None], cache
+
+    toks = [prompts[:, i:i + 1] for i in range(P)]
+    cur = jnp.asarray(toks[0])
+    # prefill: feed prompt tokens through the decode path
+    for i in range(P):
+        nxt, cache = step(params, cache, jnp.asarray(toks[i]), i)
+    out = [nxt]
+    t0 = time.time()
+    for g in range(gen - 1):
+        nxt, cache = step(params, cache, out[-1], P + g)
+        out.append(nxt)
+    dt = time.time() - t0
+    gen_toks = np.concatenate([np.asarray(o) for o in out], axis=1)
+    return np.concatenate([prompts, gen_toks], axis=1), (gen - 1) * B / dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=True)
+    params = init_params(T.specs(cfg), jax.random.PRNGKey(args.seed),
+                         jnp.float32)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    toks, tps = greedy_generate(cfg, params, prompts, args.gen)
+    out = {"arch": args.arch, "batch": args.batch,
+           "generated_shape": list(toks.shape),
+           "decode_tokens_per_s": round(tps, 1),
+           "sample": toks[0, -10:].tolist()}
+    print(json.dumps(out, indent=2))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""Step builders + abstract input specs for every (arch × input shape).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, no device allocation) for:
+
+* train:   {tokens, labels, weights, route}  (+ frames / patch_embeds)
+* prefill: {tokens}                          (+ frames / patch_embeds)
+* decode:  (cache_tree, {tokens}, pos)
+
+``weights`` (B,) and ``route`` (B,) are the network-aware data-movement
+plan inputs: ``route`` re-indexes the global batch (sample offloading —
+lowers to cross-shard movement under GSPMD), ``weights`` carries per-sample
+processing weights (0 = discarded), and the loss normalizes by Σ weights,
+mirroring the paper's H_i-weighted aggregation (eqs. (1)/(4)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as sh
+from repro.models import transformer as T
+from repro.models.module import abstract_params, logical_axes
+from repro.optim import optimizers as opt_lib
+
+
+# ---------------------------------------------------------------------------
+# Config specialization per input shape
+# ---------------------------------------------------------------------------
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    kw = {}
+    if shape.kind == "train":
+        kw["remat"] = "full"
+    if cfg.pos_embed == "learned" and shape.seq_len > cfg.max_positions:
+        # structural override for shapes beyond the model's native context
+        kw["max_positions"] = shape.seq_len if shape.kind != "decode" else cfg.max_positions
+    if (shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid")
+            and not cfg.sliding_window):
+        # full-attention archs run long_500k only as the sliding-window
+        # variant (ring KV cache) — DESIGN.md §5
+        kw["sliding_window"] = 4096
+    return cfg.with_overrides(**kw) if kw else cfg
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq_len
+    cfg = config_for_shape(cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        S_text = S - (cfg.vision_patches or 0)
+        batch = {"tokens": _sds((B, S_text), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), dtype)
+        if cfg.vision_patches:
+            batch["patch_embeds"] = _sds((B, cfg.vision_patches, cfg.d_model),
+                                         dtype)
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S_text), jnp.int32)
+            batch["weights"] = _sds((B,), jnp.float32)
+            batch["route"] = _sds((B,), jnp.int32)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    cache = abstract_params(T.init_cache_specs(cfg, B, S), dtype)
+    batch = {"tokens": _sds((B, 1), jnp.int32)}
+    pos = _sds((), jnp.int32)
+    return {"cache": cache, "batch": batch, "pos": pos}
+
+
+def batch_shardings(batch_specs, mesh, rules=None):
+    bspec = sh.batch_spec(mesh, rules)
+    bs = bspec  # leading-dim sharding; replicate if not divisible
+    def f(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        extent = sh.data_axis_size(mesh, rules)
+        spec = bs if x.shape[0] % extent == 0 else P()
+        return NamedSharding(mesh, P(*spec, *([None] * (x.ndim - 1))))
+    return jax.tree_util.tree_map(f, batch_specs)
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules=None):
+    specs = T.specs(cfg)
+    axes = logical_axes(specs)
+    return sh.tree_shardings(axes, specs, mesh, rules)
+
+
+def cache_shardings(cfg: ModelConfig, B: int, S: int, mesh, rules=None):
+    specs = T.init_cache_specs(cfg, B, S)
+    axes = logical_axes(specs)
+    return sh.tree_shardings(axes, specs, mesh, rules)
+
+
+def opt_state_shardings(opt_state_abstract, pshard, mesh, *,
+                        zero1: bool = False, rules=None):
+    """Moments mirror the parameter shardings; scalars replicated.
+
+    ``zero1`` additionally shards each moment over the data axis on its
+    first replicated, divisible dim (ZeRO stage 1: optimizer states are
+    never needed with data-axis replication — beyond-paper optimization,
+    EXPERIMENTS.md §Perf qwen3 iteration)."""
+    rep = NamedSharding(mesh, P())
+    rules = rules or sh.DEFAULT_RULES
+    sizes = sh.mesh_axis_sizes(mesh)
+    data_axes = tuple(a for a in rules["batch"] if a in sizes)
+    extent = int(np.prod([sizes[a] for a in data_axes]) or 1)
+
+    def upgrade(shard, abs_leaf):
+        if not zero1 or extent <= 1:
+            return shard
+        spec = list(shard.spec) + [None] * (abs_leaf.ndim - len(shard.spec))
+        for d in range(abs_leaf.ndim):
+            if spec[d] is None and abs_leaf.shape[d] % extent == 0:
+                spec[d] = data_axes if len(data_axes) > 1 else data_axes[0]
+                return NamedSharding(mesh, P(*spec))
+        return shard
+
+    def build(sub):
+        if isinstance(sub, dict):
+            return {k: build_key(k, v) for k, v in sub.items()}
+        return rep
+
+    def build_key(k, v):
+        if k in ("m", "v", "mu"):
+            return jax.tree_util.tree_map(upgrade, pshard, v)
+        return rep
+
+    return build(opt_state_abstract)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def route_batch(batch):
+    """Apply the data-movement plan: re-index the global batch by ``route``.
+
+    With the batch sharded over the data axis, a global re-index IS
+    cross-shard sample movement (offloading) — GSPMD lowers it to
+    collective data exchange on the ICI.
+    """
+    r = batch.get("route")
+    if r is None:
+        return batch
+    moved = {k: v[r] for k, v in batch.items()
+             if k not in ("route", "weights") and hasattr(v, "shape")}
+    return dict(batch, **moved)
+
+
+def accum_shardings(params_abstract, pshard, mesh, rules=None):
+    """ZeRO-2-style shardings for the f32 grad accumulator: each param's
+    accumulator additionally sharded over the data axis (forces a
+    reduce-scatter per microbatch instead of a replicated f32 copy)."""
+    rules = rules or sh.DEFAULT_RULES
+    sizes = sh.mesh_axis_sizes(mesh)
+    data_axes = tuple(a for a in rules["batch"] if a in sizes)
+    extent = int(np.prod([sizes[a] for a in data_axes]) or 1)
+
+    def upgrade(shard, abs_leaf):
+        spec = list(shard.spec) + [None] * (abs_leaf.ndim - len(shard.spec))
+        for d in range(abs_leaf.ndim):
+            if spec[d] is None and abs_leaf.shape[d] % max(extent, 1) == 0 \
+                    and extent > 1:
+                spec[d] = data_axes if len(data_axes) > 1 else data_axes[0]
+                return NamedSharding(mesh, P(*spec))
+        return shard
+
+    return jax.tree_util.tree_map(upgrade, pshard, params_abstract)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: opt_lib.Optimizer,
+                    clip_norm: float = 1.0, microbatches: int = 1,
+                    accum_shards=None):
+    """``microbatches`` > 1 scans gradient accumulation over M slices of
+    the (already-routed) global batch — activation/logit memory drops by
+    ~M at the cost of M smaller matmuls. ``accum_shards`` (a pytree of
+    NamedShardings from :func:`accum_shardings`) keeps the f32
+    accumulator data-sharded (ZeRO-2). EXPERIMENTS.md §Perf."""
+
+    def grads_of(params, batch):
+        def lf(p):
+            loss, metrics = T.loss_fn(p, batch, cfg)
+            wsum = jnp.maximum(batch["weights"].sum(), 1.0) \
+                if "weights" in batch else jnp.float32(1.0)
+            return loss * wsum, (metrics, wsum)
+
+        (_, (metrics, wsum)), grads = jax.value_and_grad(
+            lf, has_aux=True)(params)
+        return grads, metrics, wsum
+
+    def train_step(params, opt_state, batch):
+        batch = route_batch(batch)
+        if microbatches <= 1:
+            grads, metrics, wsum = grads_of(params, batch)
+            grads = jax.tree_util.tree_map(lambda g: g / wsum, grads)
+            loss = metrics["ce"]
+        else:
+            M = microbatches
+            split = {k: v.reshape(M, v.shape[0] // M, *v.shape[1:])
+                     for k, v in batch.items() if k != "route"}
+
+            def body(carry, mb):
+                acc, wacc = carry
+                g, met, w = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                if accum_shards is not None:
+                    acc = jax.tree_util.tree_map(
+                        jax.lax.with_sharding_constraint, acc, accum_shards)
+                return (acc, wacc + w), met["ce"] * w
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if accum_shards is not None:
+                zeros = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, zeros, accum_shards)
+            (gsum, wsum), losses = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)), split)
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / jnp.maximum(wsum, 1.0)), gsum)
+            loss = jnp.sum(losses) / jnp.maximum(wsum, 1.0)
+        grads, gnorm = opt_lib.clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        out = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, _ = T.forward(params, batch, cfg)
+        return logits[:, -1, :]
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, cache, batch, pos):
+        logits, cache = T.decode_step(params, cache, batch, pos, cfg)
+        return logits, cache
+
+    return decode

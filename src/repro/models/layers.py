@@ -1,0 +1,409 @@
+"""Core transformer layers: norms, RoPE, GQA attention (train/prefill/
+decode), SwiGLU/GELU MLPs, embeddings.
+
+Conventions
+-----------
+* activations: (batch, seq, d_model) — "B, S, D"
+* q heads are padded at config time to a multiple of the model-axis extent
+  (``cfg.num_heads_padded``); padded heads have zero Wq columns / Wo rows so
+  outputs are exact (DESIGN.md §6).
+* kv projections are replicated at train/prefill (small); the decode KV
+  cache is sequence-sharded instead ("cache_seq" logical axis).
+* long sequences use lazily-blocked attention (``blocked_attention``) so
+  S×S scores never materialize; the Pallas flash kernel (kernels/) is the
+  TPU-optimized path validated against the same reference math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import Spec
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int, axis: str = "embed") -> Spec:
+    return Spec((dim,), (axis,), init="ones")
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layernorm_specs(dim: int) -> dict:
+    return {"scale": Spec((dim,), ("embed",), init="ones"),
+            "bias": Spec((dim,), ("embed",), init="zeros")}
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, p)
+    return layernorm(x, p)
+
+
+def norm_spec(dim: int, kind: str):
+    return rmsnorm_spec(dim) if kind == "rmsnorm" else layernorm_specs(dim)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (GPT-NeoX rotate-half convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions (...,) int -> cos,sin (..., head_dim//2) f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (B,S,H,hd); cos/sin (B,S,half) or (S,half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch/heads
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:              # (B, S, half)
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention parameter specs
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg, layers_axis: int | None = None, cross: bool = False) -> dict:
+    """Parameter specs for one (or a stack of) attention layer(s).
+
+    ``layers_axis`` — if given, every tensor gets a leading stacked-layers
+    dim of that size (scanned at apply time).
+    """
+    D, hd = cfg.d_model, cfg.head_dim
+    Hp, KH = cfg.num_heads_padded, cfg.num_kv_heads
+
+    def mk(shape, axes, **kw):
+        if layers_axis is not None:
+            return Spec((layers_axis, *shape), ("layers", *axes), **kw)
+        return Spec(shape, axes, **kw)
+
+    p = {
+        "wq": mk((D, Hp * hd), ("embed", "heads")),
+        "wk": mk((D, KH * hd), ("embed", "kv_heads")),
+        "wv": mk((D, KH * hd), ("embed", "kv_heads")),
+        "wo": mk((Hp * hd, D), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk((Hp * hd,), ("heads",), init="zeros")
+        p["bk"] = mk((KH * hd,), ("kv_heads",), init="zeros")
+        p["bv"] = mk((KH * hd,), ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = mk((hd,), ("head_dim",), init="ones")
+        p["k_norm"] = mk((hd,), ("head_dim",), init="ones")
+    return p
+
+
+def _project_qkv(x, p, cfg, kv_input=None):
+    """Project to q (B,S,Hp,hd) and k,v (B,Skv,KH,hd)."""
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    kv_in = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", kv_in, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", kv_in, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.num_heads_padded, hd)
+    k = k.reshape(B, kv_in.shape[1], cfg.num_kv_heads, hd)
+    v = v.reshape(B, kv_in.shape[1], cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def kv_head_map(cfg) -> np.ndarray:
+    """Padded q-head index -> kv head index (padded heads map to 0)."""
+    H, KH, Hp = cfg.num_heads, cfg.num_kv_heads, cfg.num_heads_padded
+    ratio = H // KH
+    m = np.zeros((Hp,), np.int32)
+    m[:H] = np.arange(H) // ratio
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Attention math: full / blocked / decode
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None):
+    """Additive mask bias (…,Sq,Sk) from absolute positions."""
+    ok = jnp.ones(q_pos.shape + k_pos.shape[-1:], jnp.bool_)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def full_attention(q, k, v, kv_map, *, causal=True, window=None,
+                   q_pos=None, k_pos=None):
+    """Materialized-scores attention; use only for short sequences.
+
+    q (B,Sq,Hp,hd); k,v (B,Sk,KH,hd); kv_map (Hp,) int.
+    """
+    B, Sq, Hp, hd = q.shape
+    Sk = k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if k_pos is None:
+        k_pos = jnp.arange(Sk)
+    kx = k[:, :, kv_map, :]  # (B,Sk,Hp,hd)
+    vx = v[:, :, kv_map, :]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kx).astype(jnp.float32)
+    scores = scores / np.sqrt(hd) + _mask_bias(q_pos, k_pos, causal, window)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, vx)
+
+
+def blocked_attention(q, k, v, kv_map, *, causal=True, window=None,
+                      q_block=512):
+    """Lazily-blocked attention: scores materialize only per q-block
+    (memory O(q_block × Sk) instead of O(Sq × Sk)).
+
+    Sequentially maps over q blocks with ``lax.map`` so the HLO stays one
+    scanned body regardless of sequence length.
+    """
+    B, Sq, Hp, hd = q.shape
+    Sk = k.shape[1]
+    nq = Sq // q_block
+    assert Sq % q_block == 0, (Sq, q_block)
+    qb = q.reshape(B, nq, q_block, Hp, hd).transpose(1, 0, 2, 3, 4)
+    kx = k[:, :, kv_map, :]
+    vx = v[:, :, kv_map, :]
+    k_pos = jnp.arange(Sk)
+
+    def one_block(args):
+        i, qi = args  # qi (B, q_block, Hp, hd)
+        q_pos = i * q_block + jnp.arange(q_block)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, kx).astype(jnp.float32)
+        s = s / np.sqrt(hd) + _mask_bias(q_pos, k_pos, causal, window)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+
+    out = jax.lax.map(one_block, (jnp.arange(nq), qb))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hp, hd)
+
+
+def attention_apply(x, p, cfg, *, causal=True, kv_input=None, positions=None,
+                    window=None):
+    """Train/prefill attention for one layer. Returns (B,S,D)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(x, p, cfg, kv_input=kv_input)
+    if cfg.rope and kv_input is None:
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    kv_map = jnp.asarray(kv_head_map(cfg))
+    Sk = k.shape[1]
+    if S * Sk <= cfg.full_attn_threshold**2 or S % 512 != 0:
+        out = full_attention(q, k, v, kv_map, causal=causal, window=window)
+    else:
+        out = blocked_attention(q, k, v, kv_map, causal=causal, window=window)
+    out = out.reshape(B, S, cfg.num_heads_padded * cfg.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+# -- decode with KV cache ----------------------------------------------------
+#
+# Cache layout per layer: k,v (B, KH, S_cache, hd) with S_cache sharded over
+# the model axis ("cache_seq"); slot_pos (S_cache,) int32 holds the absolute
+# position stored in each slot (-1 = empty). Sliding-window archs use a ring
+# buffer (S_cache = window), so long_500k never materializes 524288 slots.
+
+
+def init_cache_specs(cfg, batch: int, cache_len: int, layers: int,
+                     groups_axis: str = "layers"):
+    B, KH, hd = batch, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": Spec((layers, B, KH, cache_len, hd),
+                  (groups_axis, "batch", None, "cache_seq", None), init="zeros"),
+        "v": Spec((layers, B, KH, cache_len, hd),
+                  (groups_axis, "batch", None, "cache_seq", None), init="zeros"),
+        # -1 = empty slot: unwritten positions must never be attended
+        "slot_pos": Spec((layers, cache_len), (groups_axis, "cache_seq"),
+                         init="fill", scale=-1, dtype=jnp.int32),
+    }
+
+
+def decode_attention(x, p, cfg, cache, pos, *, window=None, kv_input=None):
+    """One-token decode. x (B,1,D); cache {k,v,slot_pos} for THIS layer
+    (no leading layer dim). pos: scalar int32 absolute position.
+
+    Returns (out (B,1,D), new_cache).
+    """
+    B = x.shape[0]
+    hd, H, KH = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q, k_new, v_new = _project_qkv(x, p, cfg, kv_input=kv_input)
+    q = q[:, :, :H, :]  # drop padded heads: decode shards cache seq, not heads
+    if cfg.rope and kv_input is None:
+        cos, sin = rope_cos_sin(jnp.array([pos]), hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+
+    cache_len = cache["k"].shape[2]
+    slot = pos % cache_len  # ring for SWA; == pos when cache_len > pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.transpose(0, 2, 1, 3),
+                                     (0, 0, slot, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.transpose(0, 2, 1, 3),
+                                     (0, 0, slot, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache["slot_pos"], jnp.array([pos], jnp.int32), (slot,))
+
+    # GQA decode: q (B,1,H,hd) -> (B,KH,r,hd); contract against seq-sharded
+    # cache. Softmax over the sharded seq dim lowers to small all-reduces.
+    r = H // KH
+    qg = q.reshape(B, KH, r, hd)
+    s = jnp.einsum("bgrh,bgsh->bgrs", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    valid = slot_pos >= 0
+    if window is not None:
+        valid &= slot_pos > pos - window
+    valid |= slot_pos == pos  # current token always visible
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    og = jnp.einsum("bgrs,bgsh->bgrh", pr, v)
+    out = og.reshape(B, 1, H * hd)
+    wo_real = p["wo"][: H * hd] if p["wo"].shape[0] != H * hd else p["wo"]
+    out = jnp.einsum("bsh,hd->bsd", out, wo_real)
+    return out, {"k": k, "v": v, "slot_pos": slot_pos}
+
+
+def cross_decode_attention(x, p, cfg, k, v):
+    """Decode-time cross attention against precomputed encoder K/V.
+
+    x (B,1,D); k,v (B,KH,S_enc,hd) — no cache write, all positions valid.
+    """
+    B = x.shape[0]
+    hd, H, KH = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, 1, cfg.num_heads_padded, hd)[:, :, :H, :]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+    r = H // KH
+    qg = q.reshape(B, KH, r, hd)
+    s = jnp.einsum("bgrh,bgsh->bgrs", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    og = jnp.einsum("bgrs,bgsh->bgrh", pr, v)
+    out = og.reshape(B, 1, H * hd)
+    wo_real = p["wo"][: H * hd]
+    return jnp.einsum("bsh,hd->bsd", out, wo_real)
+
+
+def cross_kv(enc_out, p, cfg):
+    """Precompute cross-attention K/V from encoder output.
+
+    enc_out (B,S_enc,D) -> k,v (B,KH,S_enc,hd)."""
+    B, Se, _ = enc_out.shape
+    hd, KH = cfg.head_dim, cfg.num_kv_heads
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, Se, KH, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, Se, KH, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg, layers_axis: int | None = None) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+
+    def mk(shape, axes):
+        if layers_axis is not None:
+            return Spec((layers_axis, *shape), ("layers", *axes))
+        return Spec(shape, axes)
+
+    if cfg.act == "swiglu":
+        return {"w_gate": mk((D, F), ("embed", "mlp")),
+                "w_up": mk((D, F), ("embed", "mlp")),
+                "w_down": mk((F, D), ("mlp", "embed"))}
+    return {"w_up": mk((D, F), ("embed", "mlp")),
+            "w_down": mk((F, D), ("mlp", "embed"))}
+
+
+def mlp_apply(x, p, cfg):
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif cfg.act == "relu2":  # squared ReLU (nemotron/minitron)
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jnp.square(jax.nn.relu(u.astype(jnp.float32))).astype(x.dtype)
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg) -> dict:
+    p = {"tok": Spec((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"),
+                     init="embed")}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = Spec((cfg.d_model, cfg.vocab_padded),
+                            ("embed", "vocab"), init="normal")
+    if cfg.pos_embed == "learned":
+        p["pos"] = Spec((cfg.max_positions, cfg.d_model), (None, "embed"),
+                        init="embed")
+    return p
+
+
+def embed_tokens(tokens, p, cfg, positions=None):
+    x = p["tok"][tokens]  # gather (B,S,D); vocab-sharded -> GSPMD handles
+    if cfg.pos_embed == "learned":
+        if positions is None:
+            positions = jnp.arange(tokens.shape[1])
+        x = x + p["pos"][positions]
+    return x
+
+
+def lm_logits(x, p, cfg):
+    w = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", x, w)

@@ -1,0 +1,79 @@
+"""The paper's own models (§V-A): a 2-layer MLP and a small CNN for
+10-class 28×28 image recognition, trained with constant-η SGD and
+cross-entropy — matching the experimental setup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import Spec
+
+
+def mlp_specs(hidden: int = 200, n_classes: int = 10) -> dict:
+    return {
+        "w1": Spec((784, hidden), (None, None)),
+        "b1": Spec((hidden,), (None,), init="zeros"),
+        "w2": Spec((hidden, n_classes), (None, None)),
+        "b2": Spec((n_classes,), (None,), init="zeros"),
+    }
+
+
+def mlp_apply(params, x):
+    """x (B, 28, 28) -> logits (B, 10)."""
+    h = x.reshape(x.shape[0], -1) @ params["w1"] + params["b1"]
+    h = jax.nn.relu(h)
+    return h @ params["w2"] + params["b2"]
+
+
+def cnn_specs(n_classes: int = 10) -> dict:
+    return {
+        "c1": Spec((5, 5, 1, 16), (None, None, None, None)),
+        "cb1": Spec((16,), (None,), init="zeros"),
+        "c2": Spec((5, 5, 16, 32), (None, None, None, None)),
+        "cb2": Spec((32,), (None,), init="zeros"),
+        "w1": Spec((7 * 7 * 32, 128), (None, None)),
+        "b1": Spec((128,), (None,), init="zeros"),
+        "w2": Spec((128, n_classes), (None, None)),
+        "b2": Spec((n_classes,), (None,), init="zeros"),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + b)
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_apply(params, x):
+    """x (B, 28, 28) -> logits (B, 10)."""
+    h = x[..., None]
+    h = _pool(_conv(h, params["c1"], params["cb1"]))
+    h = _pool(_conv(h, params["c2"], params["cb2"]))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def ce_loss(logits, labels, weights=None):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    if weights is None:
+        return -ll.mean()
+    return -(ll * weights).sum() / jnp.maximum(weights.sum(), 1.0)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+MODELS = {
+    "mlp": (mlp_specs, mlp_apply),
+    "cnn": (cnn_specs, cnn_apply),
+}

@@ -1,0 +1,114 @@
+"""Parameter-spec based functional module system.
+
+Models are pure functions over pytrees of arrays. Each model declares its
+parameters as a tree of :class:`Spec` (shape + logical axis names + init
+law). The same spec tree drives three things:
+
+* ``init_params``      — materialize arrays (jax.random, per-leaf folded rng)
+* ``logical_axes``     — tree of logical-axis tuples (for sharding rules)
+* ``abstract_params``  — ShapeDtypeStruct tree (for dry-run lowering,
+                         no allocation)
+
+This keeps the parameter structure and its sharding metadata defined in
+exactly one place, so they cannot drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declaration of a single parameter tensor."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim (None = unsharded)
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float | None = None    # stddev override for gaussian inits
+    dtype: Any = None             # leaf dtype override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _fan_in_scale(spec: Spec) -> float:
+    """1/sqrt(fan_in) for projection-like tensors (first dim = fan-in)."""
+    if spec.scale is not None:
+        return spec.scale
+    if len(spec.shape) == 4:  # conv HWIO: fan_in = receptive field * in-ch
+        fan_in = int(np.prod(spec.shape[:3]))
+    elif len(spec.shape) >= 2:
+        fan_in = spec.shape[0]
+        # stacked-layer tensors carry a leading "layers"/"groups" axis
+        if spec.axes and spec.axes[0] in ("layers", "groups") and len(spec.shape) >= 3:
+            fan_in = spec.shape[1]
+    else:
+        fan_in = max(spec.shape[-1], 1)
+    return 1.0 / np.sqrt(max(fan_in, 1))
+
+
+def init_leaf(spec: Spec, rng: jax.Array, dtype) -> jax.Array:
+    dt = spec.dtype or dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "fill":
+        return jnp.full(spec.shape, spec.scale, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        return (jax.random.normal(rng, spec.shape, jnp.float32)
+                * (spec.scale or 0.02)).astype(dt)
+    if spec.init == "small":
+        return (jax.random.normal(rng, spec.shape, jnp.float32) * 0.02).astype(dt)
+    if spec.init == "normal":
+        return (jax.random.normal(rng, spec.shape, jnp.float32)
+                * _fan_in_scale(spec)).astype(dt)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs, rng: jax.Array, dtype=jnp.bfloat16):
+    """Materialize a spec tree into arrays; rng folded per leaf path."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)
+    out = []
+    for path, spec in leaves:
+        key = jax.random.fold_in(rng, zlib_hash(jax.tree_util.keystr(path)))
+        out.append(init_leaf(spec, key, dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def zlib_hash(s: str) -> int:
+    import zlib
+
+    return zlib.crc32(s.encode()) & 0x7FFFFFFF
+
+
+def logical_axes(specs):
+    """Tree of logical-axis tuples mirroring the spec tree."""
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def abstract_params(specs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree for .lower() without allocating anything."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        specs, is_leaf=_is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

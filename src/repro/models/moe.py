@@ -1,0 +1,151 @@
+"""Mixture-of-Experts layer: GShard-style capacity-based top-k dispatch.
+
+Dispatch is scatter/gather based (no (T,E,C) one-hot einsum tensors), so
+memory stays O(E·C·D + T·k). Two sharding modes:
+
+* ``expert``  — experts dim sharded over the model axis (olmoe: 64 experts
+  / 16 shards = 4 per shard). Token->expert movement lowers to all_to_all
+  style collectives under GSPMD.
+* ``ffn``     — per-expert hidden dim sharded over the model axis, experts
+  replicated (mixtral: 8 experts don't divide a 16-way axis; d_ff=14336
+  does). Megatron-style TP inside each expert.
+
+Router runs in fp32; aux load-balance loss follows Switch/ST-MoE
+(E · Σ_e f_e · P_e).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.module import Spec
+
+
+def _padded_experts(cfg) -> int:
+    return max(int(getattr(cfg, "moe_pad_experts", 0) or 0), cfg.num_experts)
+
+
+def moe_specs(cfg, layers_axis: int | None = None) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    E = _padded_experts(cfg)
+    pad_ep = E > cfg.num_experts
+    expert_axis = ("experts" if (cfg.expert_shard == "expert" or pad_ep)
+                   else None)
+    hidden_axis = ("expert_mlp" if (cfg.expert_shard == "ffn" and not pad_ep)
+                   else None)
+
+    def mk(shape, axes, **kw):
+        if layers_axis is not None:
+            return Spec((layers_axis, *shape), ("layers", *axes), **kw)
+        return Spec(shape, axes, **kw)
+
+    return {
+        "router": mk((D, cfg.num_experts), ("embed", None), init="small"),
+        "w_gate": mk((E, D, F), (expert_axis, "embed", hidden_axis)),
+        "w_up": mk((E, D, F), (expert_axis, "embed", hidden_axis)),
+        "w_down": mk((E, F, D), (expert_axis, hidden_axis, "embed")),
+    }
+
+
+def expert_capacity(tokens: int, cfg) -> int:
+    """Static per-expert capacity."""
+    cap = int(np.ceil(tokens * cfg.experts_per_token * cfg.capacity_factor
+                      / cfg.num_experts))
+    return max(cap, cfg.experts_per_token)
+
+
+def _maybe_shard(x, *axes):
+    """with_sharding_constraint when a mesh with the named axes is in
+    scope (the production dry-run); no-op for un-meshed smoke runs."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = set(mesh.axis_names or ())
+    except Exception:
+        return x
+
+    def keep(a):
+        if a is None:
+            return None
+        if isinstance(a, str):
+            return a if a in names else None
+        sub = tuple(x_ for x_ in a if x_ in names)  # filter tuple members
+        return sub if len(sub) > 1 else (sub[0] if sub else None)
+
+    spec = tuple(keep(a) for a in axes)
+    if all(s is None for s in spec) or not names:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*spec))
+
+
+def moe_apply(x, p, cfg):
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar f32).
+
+    ``cfg.moe_groups`` > 1 enables GROUP-LOCAL dispatch: tokens are split
+    into G groups aligned with the data-parallel sharding of the batch and
+    each group dispatches into its own (E, C_local) buffers. This keeps
+    dispatch/combine local to a data shard — without it, GSPMD replicates
+    the global (E, C, D) expert buffers across the data axis (observed in
+    the baseline dry-run: 16x redundant expert compute + multi-second
+    all-gathers; EXPERIMENTS.md §Perf, mixtral iteration 1).
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    Ep = _padded_experts(cfg)     # dummy experts receive no tokens
+    T = B * S
+    G = max(int(getattr(cfg, "moe_groups", 1) or 1), 1)
+    if T % G != 0:
+        G = 1
+    Tg = T // G
+    C = expert_capacity(Tg, cfg)
+    xt = x.reshape(G, Tg, D)
+    xt = _maybe_shard(xt, ("pod", "data"), None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)               # (G,Tg,E) f32
+    gate, eids = jax.lax.top_k(probs, k)                  # (G,Tg,k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)   # renormalize
+
+    # position-in-expert via cumsum over flattened per-group choices
+    flat_e = eids.reshape(G, Tg * k)                      # (G, Tg*k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (G, Tg*k, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - 1,
+                              flat_e[..., None], axis=2)[..., 0]
+    keep = pos < C                                        # capacity drop
+    pos_c = jnp.where(keep, pos, 0)
+    e_c = jnp.where(keep, flat_e, 0)
+
+    # scatter tokens into (G, E, C, D) expert buffers (vmapped over G so
+    # the group dim shards cleanly over the data axis)
+    x_rep = jnp.repeat(xt, k, axis=1)                     # (G, Tg*k, D)
+    contrib = jnp.where(keep[..., None], x_rep, 0)
+
+    def scatter_group(e_g, p_g, c_g):
+        return jnp.zeros((Ep, C, D), x.dtype).at[e_g, p_g].add(c_g)
+
+    buf = jax.vmap(scatter_group)(e_c, pos_c, contrib)    # (G,Ep,C,D)
+    buf = _maybe_shard(buf, ("pod", "data"), "model" if
+                       (cfg.expert_shard == "expert" or Ep > E) else None,
+                       None, None)
+
+    # per-expert SwiGLU
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+
+    # gather + gate-weighted combine (per group)
+    out_tk = jax.vmap(lambda o, e, q: o[e, q])(out_e, e_c, pos_c)
+    out_tk = out_tk * (keep[..., None]
+                       * gate.reshape(G, Tg * k)[..., None]).astype(x.dtype)
+    out = out_tk.reshape(G, Tg, k, D).sum(axis=2)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(eids, E).sum(2).reshape(T, E).astype(jnp.float32),
+        axis=0) / k
+    frac_probs = jnp.mean(probs.reshape(T, E), axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out.reshape(B, S, D), aux

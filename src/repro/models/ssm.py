@@ -1,0 +1,237 @@
+"""Mamba2 SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked-scan training path (quadratic inside a chunk on the MXU, linear
+recurrence across chunks) and an O(1)-state recurrent decode step — this
+is what makes long_500k tractable for the SSM/hybrid architectures.
+
+Projections are kept separate (w_z/w_x/w_B/w_C/w_dt) instead of one fused
+in_proj so each output gets a clean sharding (d_inner -> model axis;
+B/C/dt small, replicated). Mathematically identical to the fused form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import rmsnorm
+from repro.models.module import Spec
+
+KCONV = 4  # causal depthwise conv window (mamba2 default)
+
+
+def ssm_specs(cfg, layers_axis: int | None = None) -> dict:
+    D = cfg.d_model
+    DI = cfg.ssm_inner              # = expand * d_model
+    H = cfg.ssm_heads               # = DI / ssm_headdim
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+
+    def mk(shape, axes, **kw):
+        if layers_axis is not None:
+            return Spec((layers_axis, *shape), ("layers", *axes), **kw)
+        return Spec(shape, axes, **kw)
+
+    return {
+        "w_z": mk((D, DI), ("embed", "ssm_inner")),
+        "w_x": mk((D, DI), ("embed", "ssm_inner")),
+        "w_B": mk((D, G * N), ("embed", None)),
+        "w_C": mk((D, G * N), ("embed", None)),
+        "w_dt": mk((D, H), ("embed", "ssm_heads")),
+        "conv_w": mk((DI, KCONV), ("ssm_inner", None), init="small"),
+        "conv_b": mk((DI,), ("ssm_inner",), init="zeros"),
+        "A_log": mk((H,), ("ssm_heads",), init="zeros"),
+        "dt_bias": mk((H,), ("ssm_heads",), init="zeros"),
+        "D_skip": mk((H,), ("ssm_heads",), init="ones"),
+        "norm": mk((DI,), ("ssm_inner",), init="ones"),
+        "w_out": mk((DI, D), ("ssm_inner", "embed")),
+    }
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x (B,S,C); w (C,K); b (C,)."""
+    K = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(K))
+    return out + b
+
+
+def _segsum_decay(a):
+    """a (B,C,L,H) per-step log-decay -> L matrix (B,C,H,L,L):
+    L[i,j] = exp(sum_{k=j+1..i} a_k) for i>=j, else 0."""
+    cs = jnp.cumsum(a, axis=2)                      # inclusive (B,C,L,H)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (B,C,L_i,L_j,H)
+    L = a.shape[2]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+    return jnp.exp(diff).transpose(0, 1, 4, 2, 3)   # (B,C,H,L,L)
+
+
+def ssd_chunked(xdt, a, Bm, Cm, chunk: int):
+    """Chunked SSD scan (pure-jnp reference path).
+
+    xdt (B,S,H,P) — inputs pre-multiplied by dt
+    a   (B,S,H)   — dt * A (negative log decay per step)
+    Bm,Cm (B,S,N) — input/output projections (ngroups=1, broadcast to heads)
+    Returns y (B,S,H,P).
+    """
+    B_, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = xdt.reshape(B_, nc, chunk, H, P)
+    ac = a.reshape(B_, nc, chunk, H).astype(jnp.float32)
+    Bc = Bm.reshape(B_, nc, chunk, N)
+    Cc = Cm.reshape(B_, nc, chunk, N)
+
+    cs = jnp.cumsum(ac, axis=2)                     # (B,nc,l,H)
+    Lmat = _segsum_decay(ac).astype(xdt.dtype)      # (B,nc,H,l,l)
+
+    # intra-chunk (quadratic, MXU-friendly)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)  # (B,nc,l,s)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                        scores.astype(xdt.dtype), Lmat, xc)
+
+    # chunk-final states
+    decay_states = jnp.exp(cs[:, :, -1:, :] - cs)   # (B,nc,l,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        Bc.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))     # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, -1, :])          # (B,nc,H)
+
+    def step(carry, inp):
+        dec, st = inp                               # (B,H), (B,H,P,N)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                           # emit state BEFORE chunk
+
+    init = jnp.zeros((B_, H, P, N), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, init, (chunk_decay.transpose(1, 0, 2),
+                     states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    state_decay_out = jnp.exp(cs)                   # (B,nc,l,H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       Cc.astype(jnp.float32), prev_states, state_decay_out)
+    y = y_diag.astype(jnp.float32) + y_off
+    return y.reshape(B_, S, H, P).astype(xdt.dtype)
+
+
+def ssd_chunked_streaming(xdt, a, Bm, Cm, chunk: int):
+    """Streaming variant of ``ssd_chunked``: a ``lax.scan`` over chunks
+    computes each chunk's output on the fly instead of materializing the
+    all-chunks segsum/state tensors. Temp memory drops by ~n_chunks
+    (the structure the Pallas kernel streams in VMEM — kernels/ssd_scan.py).
+    Enabled by ``cfg.ssm_streaming`` (EXPERIMENTS.md §Perf, zamba2)."""
+    B_, S, H, P = xdt.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    xc = xdt.reshape(B_, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    ac = a.reshape(B_, nc, chunk, H).astype(jnp.float32).transpose(1, 0, 2, 3)
+    Bc = Bm.reshape(B_, nc, chunk, N).transpose(1, 0, 2, 3)
+    Cc = Cm.reshape(B_, nc, chunk, N).transpose(1, 0, 2, 3)
+    l = chunk
+    tri = jnp.tril(jnp.ones((l, l), bool))
+
+    def step(state, inp):
+        x_, a_, B_m, C_m = inp              # (B,l,H,P),(B,l,H),(B,l,N)x2
+        cs = jnp.cumsum(a_, axis=1)         # (B,l,H)
+        diff = cs[:, :, None, :] - cs[:, None, :, :]
+        Lm = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bln,bsn->bls", C_m, B_m)
+        y = jnp.einsum("bls,blsh,bshp->blhp",
+                       scores.astype(jnp.float32), Lm,
+                       x_.astype(jnp.float32))
+        y += jnp.exp(cs)[..., None] * jnp.einsum(
+            "bln,bhpn->blhp", C_m.astype(jnp.float32), state)
+        decay = jnp.exp(cs[:, -1:, :] - cs)  # (B,l,H)
+        contrib = jnp.einsum("bln,blh,blhp->bhpn",
+                             B_m.astype(jnp.float32), decay,
+                             x_.astype(jnp.float32))
+        new_state = state * jnp.exp(cs[:, -1, :])[:, :, None, None] + contrib
+        return new_state, y.astype(xdt.dtype)
+
+    init = jnp.zeros((B_, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, init, (xc, ac, Bc, Cc))
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, P)
+
+
+def ssm_apply(x, p, cfg):
+    """Full Mamba2 block (train/prefill). x (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    xs = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+
+    xs = jax.nn.silu(causal_conv1d(xs, p["conv_w"], p["conv_b"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = dt * A                                       # (B,S,H)
+
+    xh = xs.reshape(B, S, H, P)
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    ssd = ssd_chunked_streaming if cfg.ssm_streaming else ssd_chunked
+    y = ssd(xdt, a, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, H * P)
+
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm"])
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"])
+
+
+# -- decode ------------------------------------------------------------------
+
+
+def init_ssm_cache_specs(cfg, batch: int, layers: int) -> dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    DI = cfg.ssm_inner
+    return {
+        "h": Spec((layers, batch, H, P, N),
+                  ("layers", "batch", "ssm_heads", None, None),
+                  init="zeros", dtype=jnp.float32),
+        "conv": Spec((layers, batch, KCONV - 1, DI),
+                     ("layers", "batch", None, "ssm_inner"),
+                     init="zeros"),
+    }
+
+
+def ssm_decode(x, p, cfg, cache):
+    """Single-token recurrent step. x (B,1,D); cache {h, conv} for this
+    layer. Returns (out (B,1,D), new_cache)."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    xt = x[:, 0]                                     # (B,D)
+    z = xt @ p["w_z"]
+    xs = xt @ p["w_x"]
+    Bm = (xt @ p["w_B"]).astype(jnp.float32)         # (B,N)
+    Cm = (xt @ p["w_C"]).astype(jnp.float32)
+    dt = xt @ p["w_dt"]
+
+    # conv over [cached last K-1 inputs, current]
+    hist = jnp.concatenate([cache["conv"], xs[:, None, :]], axis=1)  # (B,K,DI)
+    xs = jnp.einsum("bki,ik->bi", hist, p["conv_w"]) + p["conv_b"]
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(x.dtype)
+    new_conv = hist[:, 1:, :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                          # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    # h <- h * decay + dt * (B ⊗ x)
+    h = (cache["h"] * decay[:, :, None, None]
+         + (dt[:, :, None] * xh)[..., None] * Bm[:, None, None, :])
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm)            # (B,H,P)
+    y = y + p["D_skip"][None, :, None] * xh
+    y = y.reshape(B, H * P).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm"])
+    out = (y @ p["w_out"])[:, None, :]
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,353 @@
+"""Model composition: decoder LMs (dense/MoE), Mamba2 SSM, Zamba2-style
+hybrid, Whisper-style encoder-decoder, VLM/audio embedding frontends.
+
+All families expose the same interface:
+
+* ``specs(cfg)``                          parameter spec tree
+* ``forward(params, batch, cfg)``         logits (train / prefill)
+* ``init_cache(cfg, batch, cache_len)``   decode-cache spec tree
+* ``decode_step(params, cache, batch, pos, cfg)`` one-token serve step
+
+Layer stacks are scanned (``jax.lax.scan``) over a leading "layers" dim so
+HLO size / compile time stay O(1) in depth. Hybrid models use an outer
+scan over groups with the shared attention block closed over (Zamba2's
+shared-block design maps exactly onto this).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.module import Spec
+
+
+# ---------------------------------------------------------------------------
+# Spec builders
+# ---------------------------------------------------------------------------
+
+
+def _block_specs(cfg, n_layers: int, *, cross: bool = False) -> dict:
+    """Stacked decoder-block specs (attention + mlp/moe [+ cross-attn])."""
+    p = {
+        "ln1": _stacked_norm(cfg, n_layers),
+        "attn": L.attention_specs(cfg, layers_axis=n_layers),
+        "ln2": _stacked_norm(cfg, n_layers),
+    }
+    if cross:
+        p["ln_x"] = _stacked_norm(cfg, n_layers)
+        p["xattn"] = L.attention_specs(cfg, layers_axis=n_layers)
+    if cfg.num_experts:
+        p["moe"] = M.moe_specs(cfg, layers_axis=n_layers)
+    else:
+        p["mlp"] = L.mlp_specs(cfg, layers_axis=n_layers)
+    return p
+
+
+def _stacked_norm(cfg, n: int):
+    if cfg.norm == "rmsnorm":
+        return Spec((n, cfg.d_model), ("layers", "embed"), init="ones")
+    return {"scale": Spec((n, cfg.d_model), ("layers", "embed"), init="ones"),
+            "bias": Spec((n, cfg.d_model), ("layers", "embed"), init="zeros")}
+
+
+def specs(cfg) -> dict:
+    p = {"embed": L.embed_specs(cfg), "ln_f": L.norm_spec(cfg.d_model, cfg.norm)}
+    if cfg.family == "ssm":
+        p["blocks"] = {"ln": _stacked_norm(cfg, cfg.num_layers),
+                       "ssm": S.ssm_specs(cfg, layers_axis=cfg.num_layers)}
+    elif cfg.family == "hybrid":
+        g, per = hybrid_shape(cfg)
+        p["blocks"] = {"ln": _stacked_norm(cfg, cfg.num_layers),
+                       "ssm": S.ssm_specs(cfg, layers_axis=cfg.num_layers)}
+        # one SHARED attention+mlp block, reused after every group
+        p["shared"] = {"ln1": L.norm_spec(cfg.d_model, cfg.norm),
+                       "attn": L.attention_specs(cfg),
+                       "ln2": L.norm_spec(cfg.d_model, cfg.norm),
+                       "mlp": L.mlp_specs(cfg)}
+    elif cfg.family == "encdec":
+        p["enc"] = {"blocks": _block_specs(cfg, cfg.encoder_layers),
+                    "ln_f": L.norm_spec(cfg.d_model, cfg.norm)}
+        p["blocks"] = _block_specs(cfg, cfg.num_layers, cross=True)
+    else:  # dense / moe / vlm
+        p["blocks"] = _block_specs(cfg, cfg.num_layers)
+    if cfg.vision_patches:
+        # projector from (stubbed) vision-encoder space into d_model
+        p["vis_proj"] = Spec((cfg.d_model, cfg.d_model), ("embed", None))
+    return p
+
+
+def hybrid_shape(cfg) -> tuple[int, int]:
+    per = cfg.attn_every
+    assert cfg.num_layers % per == 0, (cfg.num_layers, per)
+    return cfg.num_layers // per, per
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _norm(x, p, cfg):
+    return L.rmsnorm(x, p) if cfg.norm == "rmsnorm" else L.layernorm(x, p)
+
+
+def _attn_mlp_block(x, lp, cfg, *, causal=True, window=None, enc_out=None,
+                    cross=False):
+    """One decoder block; returns (x, aux_loss)."""
+    h = L.attention_apply(_norm(x, lp["ln1"], cfg), lp["attn"], cfg,
+                          causal=causal, window=window)
+    x = x + h
+    if cross:
+        h = L.attention_apply(_norm(x, lp["ln_x"], cfg), lp["xattn"], cfg,
+                              causal=False, kv_input=enc_out)
+        x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.num_experts:
+        h, aux = M.moe_apply(_norm(x, lp["ln2"], cfg), lp["moe"], cfg)
+    else:
+        h = L.mlp_apply(_norm(x, lp["ln2"], cfg), lp["mlp"], cfg)
+    return x + h, aux
+
+
+def _scan_blocks(x, stacked, cfg, *, causal=True, window=None, enc_out=None,
+                 cross=False):
+    def body(carry, lp):
+        y, aux = _attn_mlp_block(carry, lp, cfg, causal=causal, window=window,
+                                 enc_out=enc_out, cross=cross)
+        return y, aux
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+def _scan_ssm_blocks(x, stacked, cfg):
+    def body(carry, lp):
+        h = S.ssm_apply(_norm(carry, lp["ln"], cfg), lp["ssm"], cfg)
+        return carry + h, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def _embed_input(params, batch, cfg):
+    """tokens (+ optional frontend embeddings) -> (B, S_total, D)."""
+    x = L.embed_tokens(batch["tokens"], params["embed"], cfg)
+    if cfg.vision_patches:
+        vis = jnp.einsum("bpd,de->bpe", batch["patch_embeds"],
+                         params["vis_proj"]).astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def forward(params, batch, cfg):
+    """Returns (logits (B,S,V_pad), aux_loss)."""
+    window = cfg.sliding_window
+    if cfg.family == "encdec":
+        enc = batch["frames"]                      # stubbed audio embeddings
+        enc, _ = _scan_blocks(enc, params["enc"]["blocks"], cfg, causal=False)
+        enc = _norm(enc, params["enc"]["ln_f"], cfg)
+        x = L.embed_tokens(batch["tokens"], params["embed"], cfg)
+        x, aux = _scan_blocks(x, params["blocks"], cfg, causal=True,
+                              enc_out=enc, cross=True)
+    elif cfg.family == "ssm":
+        x = _embed_input(params, batch, cfg)
+        x = _scan_ssm_blocks(x, params["blocks"], cfg)
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "hybrid":
+        x = _embed_input(params, batch, cfg)
+        g, per = hybrid_shape(cfg)
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape(g, per, *a.shape[1:]), params["blocks"])
+
+        def group_body(carry, grp):
+            y = _scan_ssm_blocks(carry, grp, cfg)
+            y2, _ = _attn_mlp_block(y, params["shared"], cfg, causal=True,
+                                    window=window)
+            return y2, None
+
+        if cfg.remat == "full":
+            # the OUTER scan must be rematerialized too: the shared
+            # attention block's softmax/intermediates per group otherwise
+            # stay live for backward (§Perf zamba2 iteration 2 — the 203
+            # GB/dev baseline was exactly these buffers, not the SSD scan)
+            group_body = jax.checkpoint(group_body)
+        x, _ = jax.lax.scan(group_body, x, stacked)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x = _embed_input(params, batch, cfg)
+        x, aux = _scan_blocks(x, params["blocks"], cfg, causal=True,
+                              window=window)
+    x = _norm(x, params["ln_f"], cfg)
+    logits = L.lm_logits(x, params["embed"], cfg)
+    if cfg.vision_patches:
+        logits = logits[:, cfg.vision_patches:, :]  # text positions only
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg):
+    """Weighted next-token cross-entropy.
+
+    ``batch['weights']`` (B,) — per-sample weights from the network-aware
+    data-movement plan (0 = discarded sample); the loss normalizes by the
+    total processed weight, mirroring eq. (1)/(4) of the paper.
+    """
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    w = batch.get("weights")
+    if w is None:
+        w = jnp.ones(labels.shape[:1], jnp.float32)
+    tok_w = w[:, None] * jnp.ones_like(ll)
+    loss = -(ll * tok_w).sum() / jnp.maximum(tok_w.sum(), 1.0)
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+def encode(params, frames, cfg):
+    """Encoder pass for enc-dec archs: returns (enc_out, cross_k, cross_v)
+    with cross K/V stacked over decoder layers (L,B,KH,S_enc,hd) — the
+    decode-time cross-attention cache."""
+    enc, _ = _scan_blocks(frames, params["enc"]["blocks"], cfg, causal=False)
+    enc = _norm(enc, params["enc"]["ln_f"], cfg)
+
+    def body(_, lp):
+        return None, L.cross_kv(enc, lp["xattn"], cfg)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["blocks"])
+    return enc, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def cache_len_for(cfg, seq_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache_specs(cfg, batch: int, seq_len: int) -> dict:
+    cl = cache_len_for(cfg, seq_len)
+    if cfg.family == "ssm":
+        return S.init_ssm_cache_specs(cfg, batch, cfg.num_layers)
+    if cfg.family == "hybrid":
+        g, per = hybrid_shape(cfg)
+        c = S.init_ssm_cache_specs(cfg, batch, cfg.num_layers)
+        c["attn"] = L.init_cache_specs(cfg, batch, cl, g, groups_axis="groups")
+        return c
+    if cfg.family == "encdec":
+        c = L.init_cache_specs(cfg, batch, cl, cfg.num_layers)
+        KH, hd = cfg.num_kv_heads, cfg.head_dim
+        c["cross_k"] = Spec((cfg.num_layers, batch, KH, cfg.encoder_seq, hd),
+                            ("layers", "batch", None, "cache_seq", None),
+                            init="zeros")
+        c["cross_v"] = Spec((cfg.num_layers, batch, KH, cfg.encoder_seq, hd),
+                            ("layers", "batch", None, "cache_seq", None),
+                            init="zeros")
+        return c
+    return L.init_cache_specs(cfg, batch, cl, cfg.num_layers)
+
+
+def decode_step(params, cache, batch, pos, cfg):
+    """One-token decode. batch['tokens'] (B,1). Returns (logits, cache)."""
+    window = cfg.sliding_window
+    tok = batch["tokens"]
+    x = L.embed_tokens(tok, params["embed"], cfg,
+                       positions=jnp.array([pos]) if cfg.pos_embed == "learned"
+                       else None)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            lp, cl = xs
+            h, nc = S.ssm_decode(_norm(carry, lp["ln"], cfg), lp["ssm"], cfg, cl)
+            return carry + h, nc
+
+        x, new_cache = jax.lax.scan(
+            body, x, ({"ln": params["blocks"]["ln"], "ssm": params["blocks"]["ssm"]},
+                      {"h": cache["h"], "conv": cache["conv"]}))
+        cache = new_cache
+
+    elif cfg.family == "hybrid":
+        g, per = hybrid_shape(cfg)
+        ssm_stack = jax.tree_util.tree_map(
+            lambda a: a.reshape(g, per, *a.shape[1:]),
+            {"ln": params["blocks"]["ln"], "ssm": params["blocks"]["ssm"]})
+        ssm_cache = jax.tree_util.tree_map(
+            lambda a: a.reshape(g, per, *a.shape[1:]),
+            {"h": cache["h"], "conv": cache["conv"]})
+
+        def group_body(carry, xs):
+            grp, grp_cache, attn_cache_g = xs
+
+            def inner(c2, xs2):
+                lp, cl = xs2
+                h, nc = S.ssm_decode(_norm(c2, lp["ln"], cfg), lp["ssm"], cfg, cl)
+                return c2 + h, nc
+
+            y, new_ssm = jax.lax.scan(inner, carry, (grp, grp_cache))
+            sp = params["shared"]
+            h, new_attn = L.decode_attention(
+                _norm(y, sp["ln1"], cfg), sp["attn"], cfg, attn_cache_g, pos,
+                window=window)
+            y = y + h
+            y = y + L.mlp_apply(_norm(y, sp["ln2"], cfg), sp["mlp"], cfg)
+            return y, (new_ssm, new_attn)
+
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            group_body, x, (ssm_stack, ssm_cache, cache["attn"]))
+        cache = {
+            "h": new_ssm["h"].reshape(cfg.num_layers, *new_ssm["h"].shape[2:]),
+            "conv": new_ssm["conv"].reshape(cfg.num_layers,
+                                            *new_ssm["conv"].shape[2:]),
+            "attn": new_attn,
+        }
+
+    elif cfg.family == "encdec":
+        def body(carry, xs):
+            lp, cl, xk, xv = xs
+            h, nc = L.decode_attention(_norm(carry, lp["ln1"], cfg), lp["attn"],
+                                       cfg, cl, pos, window=window)
+            y = carry + h
+            # cross-attention against precomputed encoder K/V (no cache write)
+            h = L.cross_decode_attention(_norm(y, lp["ln_x"], cfg),
+                                         lp["xattn"], cfg, xk, xv)
+            y = y + h
+            y = y + L.mlp_apply(_norm(y, lp["ln2"], cfg), lp["mlp"], cfg)
+            return y, nc
+
+        x, new_attn = jax.lax.scan(
+            body, x, (params["blocks"],
+                      {"k": cache["k"], "v": cache["v"],
+                       "slot_pos": cache["slot_pos"]},
+                      cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, **new_attn)
+
+    else:
+        def body(carry, xs):
+            lp, cl = xs
+            h, nc = L.decode_attention(_norm(carry, lp["ln1"], cfg), lp["attn"],
+                                       cfg, cl, pos, window=window)
+            y = carry + h
+            if cfg.num_experts:
+                h, _ = M.moe_apply(_norm(y, lp["ln2"], cfg), lp["moe"], cfg)
+            else:
+                h = L.mlp_apply(_norm(y, lp["ln2"], cfg), lp["mlp"], cfg)
+            return y + h, nc
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        cache = new_cache
+
+    x = _norm(x, params["ln_f"], cfg)
+    logits = L.lm_logits(x, params["embed"], cfg)
+    return logits, cache

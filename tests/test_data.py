@@ -1,0 +1,102 @@
+"""Data pipeline: arrivals, non-iid skew, movement application
+conservation, similarity metric."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import movement as mv
+from repro.core.costs import synthetic_costs
+from repro.core.topology import fully_connected
+from repro.data import pipeline as pl
+from repro.data.synthetic import make_image_dataset, make_token_dataset
+
+
+def test_image_dataset_deterministic_and_balanced():
+    x1, y1, _, _ = make_image_dataset(2000, 100, seed=7)
+    x2, y2, _, _ = make_image_dataset(2000, 100, seed=7)
+    np.testing.assert_array_equal(x1, x2)
+    counts = np.bincount(y1, minlength=10)
+    assert counts.min() > 100  # roughly balanced
+
+
+def test_token_dataset_zipf_and_range():
+    t = make_token_dataset(50_000, 512, seed=0)
+    assert t.min() >= 0 and t.max() < 512
+    counts = np.bincount(t, minlength=512)
+    assert counts[:10].sum() > counts[-100:].sum()  # head-heavy
+
+
+def test_noniid_streams_restrict_labels():
+    rng = np.random.default_rng(0)
+    y = np.repeat(np.arange(10), 500)
+    s = pl.poisson_streams(6, 20, y, iid=False, labels_per_device=5, rng=rng)
+    for i in range(6):
+        labs = np.unique(np.concatenate(
+            [y[s.collected[t][i]] for t in range(20)]))
+        assert len(labs) <= 5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 10), st.integers(0, 1000))
+def test_apply_movement_conserves_samples(n, T, seed):
+    """Every collected sample is either processed (once, somewhere, with
+    one round of delay for offloads) or discarded — never duplicated."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 10, 2000)
+    streams = pl.poisson_streams(n, T, y, rng=rng, mean_per_round=15)
+    traces = synthetic_costs(n, T, rng)
+    adj = fully_connected(n)
+    plan = mv.greedy_linear(traces, adj)
+    processed = pl.apply_movement(streams, plan, rng)
+
+    collected_all = np.concatenate(
+        [ix for row in streams.collected for ix in row])
+    processed_all = np.concatenate(
+        [ix for row in processed for ix in row]) if any(
+        len(ix) for row in processed for ix in row) else np.empty(0)
+    # multiset inclusion: processed ⊆ collected
+    col_counts = {}
+    for v in collected_all:
+        col_counts[v] = col_counts.get(v, 0) + 1
+    for v in processed_all:
+        col_counts[v] = col_counts.get(v, 0) - 1
+    assert all(c >= 0 for c in col_counts.values())
+    assert len(processed_all) <= len(collected_all)
+
+
+def test_apply_movement_full_offload_delay():
+    """All of device 0's round-t data must be processed by device 1 at
+    round t+1."""
+    n, T = 2, 4
+    y = np.zeros(100, np.int64)
+    streams = pl.FogStreams(
+        collected=[[np.arange(10) + 10 * t, np.empty(0, np.int64)]
+                   for t in range(T)], n=n, T=T)
+    s = np.zeros((T, n, n))
+    s[:, 0, 1] = 1.0
+    s[:, 1, 1] = 1.0
+    plan = mv.MovementPlan(s=s, r=np.zeros((T, n)))
+    proc = pl.apply_movement(streams, plan, np.random.default_rng(0))
+    assert len(proc[0][0]) == 0
+    for t in range(1, T):
+        np.testing.assert_array_equal(np.sort(proc[t][1]),
+                                      np.arange(10) + 10 * (t - 1))
+
+
+def test_label_similarity_bounds_and_extremes():
+    same = [np.array([0, 1, 2]), np.array([0, 1, 2])]
+    disj = [np.array([0, 0, 0]), np.array([1, 1, 1])]
+    assert pl.label_similarity(same) == pytest.approx(1.0)
+    assert pl.label_similarity(disj) == pytest.approx(0.0)
+    mixed = [np.array([0, 0, 1]), np.array([0, 1, 1])]
+    assert 0.0 < pl.label_similarity(mixed) <= 1.0
+
+
+def test_pad_batches_weights():
+    x = np.arange(40, dtype=np.float32).reshape(10, 2, 2)
+    y = np.arange(10, dtype=np.int32)
+    xb, yb, w = pl.pad_batches([np.array([1, 3]), np.empty(0, np.int64)],
+                               x, y, max_points=4)
+    assert xb.shape == (2, 4, 2, 2)
+    assert w[0].sum() == 2 and w[1].sum() == 0
+    np.testing.assert_array_equal(yb[0, :2], [1, 3])

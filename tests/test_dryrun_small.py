@@ -1,0 +1,133 @@
+"""Dry-run machinery tests on a small (subprocess) device pool: proves
+lower+compile+roofline extraction works end-to-end and that
+cost_analysis FLOPs are per-device (the scaling assumption in
+launch/dryrun.py)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_cost_analysis_flops_are_per_device():
+    out = _run("""
+        import jax, jax.numpy as jnp, json
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        mesh = jax.make_mesh((8,), ("d",))
+        A = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+        sh = NamedSharding(mesh, P("d", None))
+        rep = NamedSharding(mesh, P())
+        with mesh:
+            c = jax.jit(lambda a, b: a @ b, in_shardings=(sh, rep)).lower(A, A).compile()
+        ca = c.cost_analysis()
+        if isinstance(ca, (list, tuple)): ca = ca[0]
+        print(json.dumps({"flops": float(ca.get("flops", -1))}))
+    """)
+    d = json.loads(out.strip().splitlines()[-1])
+    global_flops = 2 * 1024 ** 3
+    assert d["flops"] == pytest.approx(global_flops / 8, rel=0.05)
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import collective_stats, _shape_bytes
+
+    hlo = """
+      %ar = bf16[16,128]{1,0} all-reduce(bf16[16,128]{1,0} %x), replica_groups={}
+      %ag.1 = f32[2048]{0} all-gather(f32[256]{0} %y), dimensions={0}
+      ROOT %t = (bf16[4,4]{1,0}, s32[8]{0}) all-to-all(%a, %b)
+    """
+    st = collective_stats(hlo)
+    assert st["per_op"]["all-reduce"]["count"] == 1
+    assert st["per_op"]["all-reduce"]["result_bytes"] == 16 * 128 * 2
+    assert st["per_op"]["all-gather"]["result_bytes"] == 2048 * 4
+    assert st["per_op"]["all-to-all"]["result_bytes"] == 4 * 4 * 2 + 8 * 4
+    # moved bytes: 2x all-reduce + 1x others
+    want = 2 * 16 * 128 * 2 + 2048 * 4 + (4 * 4 * 2 + 8 * 4)
+    assert st["moved_bytes_per_device"] == want
+    assert _shape_bytes("bf16[2,3]{1,0}") == 12
+
+
+@pytest.mark.parametrize("arch,shape", [("qwen1.5-4b", "train_4k"),
+                                        ("mamba2-1.3b", "decode_32k")])
+def test_small_mesh_dryrun_smoke(arch, shape):
+    """Reduced-config lower+compile on a 4x2 mesh with roofline terms."""
+    out = _run(f"""
+        import jax, json
+        import numpy as np
+        jax.config.update("jax_platforms", "cpu")
+        from repro.launch import dryrun as DR
+        from repro.configs.registry import get_config
+        from repro.configs.base import INPUT_SHAPES
+        from repro.launch import steps as St
+        from repro.models import transformer as T
+        from repro.models.module import abstract_params
+        from repro.optim import optimizers as opt_lib
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cfg0 = get_config("{arch}", smoke=True)
+        shape = INPUT_SHAPES["{shape}"]
+        import dataclasses
+        shape = dataclasses.replace(shape, global_batch=8, seq_len=64)
+        cfg = St.config_for_shape(cfg0, shape)
+        pshard = St.param_shardings(cfg, mesh)
+        ap = abstract_params(T.specs(cfg))
+        if shape.kind == "train":
+            opt = opt_lib.get_optimizer("adamw", 1e-4)
+            aopt = jax.eval_shape(opt.init, ap)
+            oshard = St.opt_state_shardings(aopt, pshard, mesh)
+            bi = St.input_specs(cfg, shape)
+            bs = St.batch_shardings(bi, mesh)
+            with mesh:
+                low = jax.jit(St.make_train_step(cfg, opt),
+                              in_shardings=(pshard, oshard, bs)).lower(ap, aopt, bi)
+        else:
+            ios = St.input_specs(cfg, shape)
+            cs = St.cache_shardings(cfg, shape.global_batch, shape.seq_len, mesh)
+            bs = St.batch_shardings(ios["batch"], mesh)
+            rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+            with mesh:
+                low = jax.jit(St.make_decode_step(cfg),
+                              in_shardings=(pshard, cs, bs, rep)).lower(
+                    ap, ios["cache"], ios["batch"], ios["pos"])
+        comp = low.compile()
+        ca = comp.cost_analysis()
+        if isinstance(ca, (list, tuple)): ca = ca[0]
+        st = DR.collective_stats(comp.as_text())
+        print(json.dumps({{"flops": float(ca.get("flops", 0)),
+                           "colls": sum(v["count"] for v in st["per_op"].values())}}))
+    """)
+    d = json.loads(out.strip().splitlines()[-1])
+    assert d["flops"] > 0
+    assert d["colls"] > 0  # sharded step must communicate
+
+
+def test_baseline_jsonl_all_pass_if_present():
+    """If the full 80-combo baseline has been generated, every row must
+    be a PASS (no 'error' entries) and cover 10 archs x 4 shapes x 2
+    meshes."""
+    path = os.path.join(REPO, "results", "dryrun_baseline.jsonl")
+    if not os.path.exists(path):
+        pytest.skip("baseline sweep not generated in this checkout")
+    rows = [json.loads(l) for l in open(path)]
+    errs = [r for r in rows if "error" in r]
+    assert not errs, errs[:3]
+    combos = {(r["arch"], r["shape"], r["mesh"]) for r in rows}
+    assert len(combos) >= 80
+    for r in rows:
+        assert r["compute_s"] >= 0 and r["memory_s"] > 0
+        assert r["dominant"] in ("compute_s", "memory_s", "collective_s")

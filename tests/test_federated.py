@@ -1,0 +1,57 @@
+"""Federated engine unit tests: weighted aggregation, sync, churn."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import federated as F
+
+
+def test_aggregate_weighted_mean():
+    W = {"w": jnp.array([[1.0, 1.0], [3.0, 3.0], [5.0, 5.0]])}
+    H = jnp.array([1.0, 1.0, 2.0])
+    contributing = jnp.ones(3)
+    out = F.aggregate(W, H, contributing, None)
+    np.testing.assert_allclose(np.asarray(out["w"]), [3.5, 3.5])
+
+
+def test_aggregate_excludes_noncontributing():
+    W = {"w": jnp.array([[1.0], [100.0]])}
+    H = jnp.array([2.0, 50.0])
+    out = F.aggregate(W, H, jnp.array([1.0, 0.0]), None)
+    np.testing.assert_allclose(np.asarray(out["w"]), [1.0])
+
+
+def test_aggregate_all_inactive_keeps_previous():
+    W = {"w": jnp.array([[1.0], [2.0]])}
+    prev = {"w": jnp.array([7.0])}
+    out = F.aggregate(W, jnp.array([1.0, 1.0]), jnp.zeros(2), prev)
+    np.testing.assert_allclose(np.asarray(out["w"]), [7.0])
+
+
+def test_sync_only_updates_active():
+    W = {"w": jnp.array([[1.0], [2.0], [3.0]])}
+    g = {"w": jnp.array([9.0])}
+    out = F._sync(W, g, jnp.array([True, False, True]))
+    np.testing.assert_allclose(np.asarray(out["w"]), [[9.0], [2.0], [9.0]])
+
+
+def test_device_step_no_data_no_update():
+    params, apply_fn = F.make_model("mlp", __import__("jax").random.PRNGKey(0))
+    W = F._stack(params, 2)
+    step = F.make_device_step(apply_fn, 0.5)
+    xb = jnp.asarray(np.random.default_rng(0).standard_normal((2, 3, 28, 28)),
+                     jnp.float32)
+    yb = jnp.ones((2, 3), jnp.int32)
+    w = jnp.stack([jnp.ones(3), jnp.zeros(3)])        # device 1: no data
+    W2, losses = step(W, xb, yb, w, jnp.ones(2))
+    d0_changed = float(jnp.abs(W2["w1"][0] - W["w1"][0]).max())
+    d1_changed = float(jnp.abs(W2["w1"][1] - W["w1"][1]).max())
+    assert d0_changed > 0
+    assert d1_changed == 0.0
+
+
+def test_churn_activity_shape_and_rates():
+    cfg = F.FedConfig(n=40, T=200, tau=10, p_exit=0.05, p_entry=0.05)
+    act = F.churn_activity(cfg, np.random.default_rng(0))
+    assert act.shape == (200, 40)
+    assert 0.3 < act.mean() < 1.0

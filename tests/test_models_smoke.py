@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: a REDUCED same-family variant (2 layers,
+d_model<=512, <=4 experts) runs one forward + one train step + one decode
+step on CPU, asserting shapes and finiteness. The FULL configs are
+exercised via the dry-run only."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import all_archs, get_config
+from repro.launch import steps as St
+from repro.models import transformer as T
+from repro.models.module import abstract_params, init_params, param_count
+from repro.optim import optimizers as opt_lib
+
+ARCHS = all_archs()
+RNG = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, train=True):
+    batch = {"tokens": jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            RNG, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.vision_patches:
+        batch["patch_embeds"] = jax.random.normal(
+            RNG, (B, cfg.vision_patches, cfg.d_model))
+    if train:
+        batch["labels"] = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+        batch["weights"] = jnp.ones((B,), jnp.float32)
+        batch["route"] = jnp.arange(B, dtype=jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_config_limits(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(T.specs(cfg), RNG, jnp.float32)
+    logits, aux = jax.jit(lambda p, b: T.forward(p, b, cfg))(
+        params, _batch(cfg, train=False))
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(T.specs(cfg), RNG, jnp.float32)
+    opt = opt_lib.get_optimizer("adamw", 1e-3)
+    ostate = opt.init(params)
+    step = St.make_train_step(cfg, opt)
+    p2, o2, m = jax.jit(step)(params, ostate, _batch(cfg))
+    assert bool(jnp.isfinite(m["loss"])) and float(m["loss"]) > 0
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    leaves = jax.tree_util.tree_leaves(p2)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(T.specs(cfg), RNG, jnp.float32)
+    cache = init_params(T.init_cache_specs(cfg, B, 64), RNG, jnp.float32)
+    tok = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    logits, cache2 = jax.jit(
+        lambda p, c: T.decode_step(p, c, tok, 5, cfg))(params, cache)
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "mamba2-1.3b", "mixtral-8x7b",
+                                  "zamba2-7b", "olmoe-1b-7b", "qwen1.5-4b",
+                                  "minitron-4b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the training forward's logits
+    (same params, same tokens) — validates cache correctness. MoE capacity
+    is raised so no tokens drop (GShard dropping is batch-size dependent
+    and legitimately differs between an 8-token forward and 1-token
+    decode)."""
+    cfg = get_config(arch, smoke=True)
+    if cfg.num_experts:
+        cfg = cfg.with_overrides(capacity_factor=8.0)
+    params = init_params(T.specs(cfg), RNG, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                              cfg.vocab_size)
+    full_logits, _ = T.forward(params, {"tokens": toks}, cfg)
+    cache = init_params(T.init_cache_specs(cfg, 1, 16), RNG, jnp.float32)
+    step = jax.jit(lambda p, c, t, i: T.decode_step(
+        p, c, {"tokens": t}, i, cfg))
+    outs = []
+    for i in range(8):
+        lg, cache = step(params, cache, toks[:, i:i + 1], i)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_sliding_window_decode_ring_buffer():
+    """SWA ring cache: old positions are evicted; decode agrees with a
+    full-cache run restricted to the window."""
+    cfg = get_config("mixtral-8x7b", smoke=True)  # window=32 in smoke
+    cfg = cfg.with_overrides(sliding_window=8)
+    params = init_params(T.specs(cfg), RNG, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 20), 0,
+                              cfg.vocab_size)
+    # ring cache sized to the window
+    ring = init_params(T.init_cache_specs(cfg, 1, 8), RNG, jnp.float32)
+    big = init_params(T.init_cache_specs(cfg, 1, 32), RNG, jnp.float32)
+    step = jax.jit(lambda p, c, t, i: T.decode_step(
+        p, c, {"tokens": t}, i, cfg))
+    for i in range(20):
+        lr_, ring = step(params, ring, toks[:, i:i + 1], i)
+        lb_, big = step(params, big, toks[:, i:i + 1], i)
+    np.testing.assert_allclose(np.asarray(lr_), np.asarray(lb_),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_param_counts_match_scale():
+    """Full configs must land in the advertised parameter range."""
+    expected = {"qwen3-14b": (13e9, 16e9), "mixtral-8x7b": (44e9, 49e9),
+                "mamba2-1.3b": (1.1e9, 1.6e9), "olmoe-1b-7b": (6e9, 8e9),
+                "phi4-mini-3.8b": (3.3e9, 4.6e9)}
+    for arch, (lo, hi) in expected.items():
+        cfg = get_config(arch)
+        n = param_count(T.specs(cfg))
+        assert lo < n < hi, (arch, n)

@@ -1,0 +1,97 @@
+"""MoE dispatch properties (hypothesis): conservation, capacity,
+group-locality, expert padding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.models import moe as M
+from repro.models.module import init_params
+
+
+def _setup(cf=4.0, groups=1, pad=0):
+    cfg = get_config("olmoe-1b-7b", smoke=True).with_overrides(
+        capacity_factor=cf, moe_groups=groups, moe_pad_experts=pad)
+    p = init_params(M.moe_specs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    return cfg, p
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 100))
+def test_moe_identity_when_experts_linear(batch, seed):
+    """With generous capacity, output = Σ_k gate_k · expert_k(x): check
+    against a dense (loop-over-experts) reference computation."""
+    cfg, p = _setup(cf=8.0)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((batch, 8, cfg.d_model)) * 0.5,
+                    jnp.float32)
+    out, _ = M.moe_apply(x, p, cfg)
+
+    # dense reference
+    T = batch * 8
+    xt = x.reshape(T, -1)
+    logits = xt @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, eids = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate = gate / gate.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xt)
+    for e in range(cfg.num_experts):
+        h = jax.nn.silu((xt @ p["w_gate"][e]).astype(jnp.float32)) \
+            .astype(x.dtype) * (xt @ p["w_up"][e])
+        oe = h @ p["w_down"][e]
+        for k in range(cfg.experts_per_token):
+            ref = ref + jnp.where((eids[:, k] == e)[:, None],
+                                  gate[:, k][:, None] * oe, 0.0)
+    np.testing.assert_allclose(np.asarray(out.reshape(T, -1)),
+                               np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """At capacity_factor -> 0ish, most tokens drop and the output
+    shrinks toward zero (dropped tokens contribute nothing)."""
+    cfg_lo, p = _setup(cf=0.25)
+    cfg_hi = cfg_lo.with_overrides(capacity_factor=8.0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 32, cfg_lo.d_model)),
+                    jnp.float32)
+    out_lo, _ = M.moe_apply(x, p, cfg_lo)
+    out_hi, _ = M.moe_apply(x, p, cfg_hi)
+    assert float(jnp.abs(out_lo).mean()) < float(jnp.abs(out_hi).mean())
+
+
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_moe_groups_equivalent_without_drops(groups):
+    cfg1, p = _setup(cf=8.0, groups=1)
+    cfgg = cfg1.with_overrides(moe_groups=groups)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((4, 16, cfg1.d_model)), jnp.float32)
+    o1, a1 = M.moe_apply(x, p, cfg1)
+    og, ag = M.moe_apply(x, p, cfgg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(og), atol=1e-5)
+    assert float(abs(a1 - ag)) < 1e-5
+
+
+def test_moe_padded_experts_receive_no_tokens():
+    cfg, p = _setup(cf=8.0, pad=8)
+    assert p["w_gate"].shape[0] == 8          # padded weights exist
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    out, _ = M.moe_apply(x, p, cfg)
+    # gradient wrt padded expert weights must be zero (no tokens routed)
+    g = jax.grad(lambda q: M.moe_apply(x, q, cfg)[0].sum())(p)
+    pad_grad = float(jnp.abs(g["w_gate"][cfg.num_experts:]).max())
+    real_grad = float(jnp.abs(g["w_gate"][:cfg.num_experts]).max())
+    assert pad_grad == 0.0
+    assert real_grad > 0.0
+
+
+def test_moe_aux_loss_balanced_router():
+    """Uniform router -> aux loss ~= 1 (its minimum for balanced load)."""
+    cfg, p = _setup(cf=8.0)
+    p = dict(p, router=jnp.zeros_like(p["router"]))
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 64, cfg.d_model)), jnp.float32)
+    _, aux = M.moe_apply(x, p, cfg)
+    assert abs(float(aux) - 1.0) < 0.15

@@ -1,0 +1,146 @@
+"""Property + unit tests for the data-movement optimizer (paper eqs. 5-9,
+Theorems 3, 4, 6)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import movement as mv
+from repro.core.costs import CostTraces, synthetic_costs, with_capacity
+from repro.core.topology import fully_connected, make_topology
+
+
+def _traces(T, n, rng, f=0.7):
+    return synthetic_costs(n, T, rng, f_err=f)
+
+
+def test_plan_invariants_greedy():
+    rng = np.random.default_rng(0)
+    tr = _traces(12, 8, rng)
+    adj = make_topology("random", 8, rng, rho=0.4)
+    plan = mv.greedy_linear(tr, adj)
+    plan.check(adj)
+    # bang-bang: every decision is 0 or 1 (Thm 3)
+    vals = np.concatenate([plan.s.ravel(), plan.r.ravel()])
+    assert np.all((vals < 1e-9) | (vals > 1 - 1e-9))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 8), st.integers(0, 10_000),
+       st.floats(0.05, 2.0))
+def test_greedy_is_pointwise_optimal(T, n, seed, f):
+    """Thm 3: for every (t,i) the chosen option has the least marginal
+    cost among {process, best-offload, discard}."""
+    rng = np.random.default_rng(seed)
+    tr = _traces(T, n, rng, f=f)
+    adj = make_topology("random", n, rng, rho=0.5)
+    plan = mv.greedy_linear(tr, adj)
+    plan.check(adj)
+    for t in range(T - 1):  # final round: offload disabled by design
+        c_next = tr.c_node[min(t + 1, T - 1)]
+        eff = tr.c_link[t] + c_next[None, :]
+        eff = np.where(adj, eff, np.inf)
+        np.fill_diagonal(eff, np.inf)
+        best_off = eff.min(axis=1)
+        best = np.minimum(np.minimum(tr.c_node[t], best_off), tr.f_err[t])
+        off_mask = plan.s[t] * (1 - np.eye(n))
+        eff_fin = np.where(np.isinf(eff), 0.0, eff)
+        chosen = (tr.c_node[t] * np.diag(plan.s[t])
+                  + (off_mask * eff_fin).sum(1)
+                  + tr.f_err[t] * plan.r[t])
+        assert np.allclose(chosen, best, atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 8), st.integers(3, 7), st.integers(0, 10_000))
+def test_greedy_beats_no_movement(T, n, seed):
+    rng = np.random.default_rng(seed)
+    tr = _traces(T, n, rng)
+    adj = fully_connected(n)
+    D = rng.poisson(20, (T, n)).astype(float)
+    c_greedy = mv.plan_cost(mv.greedy_linear(tr, adj), tr, D)["total"]
+    c_base = mv.plan_cost(mv.no_movement_plan(T, n), tr, D)["total"]
+    assert c_greedy <= c_base + 1e-6
+
+
+def test_repair_satisfies_capacities():
+    rng = np.random.default_rng(3)
+    T, n = 10, 8
+    tr = with_capacity(_traces(T, n, rng), cap_node=25.0, cap_link=15.0)
+    adj = fully_connected(n)
+    D = rng.poisson(20, (T, n)).astype(float)
+    plan = mv.repair_capacities(mv.greedy_linear(tr, adj), tr, adj, D)
+    plan.check(adj)
+    G = plan.processed(D)
+    assert np.all(G <= tr.cap_node + 1e-6), G.max()
+    link_vol = plan.s * (1 - np.eye(n))[None] * D[:, :, None]
+    assert np.all(link_vol <= tr.cap_link + 1e-6)
+
+
+def test_convex_solver_feasible_and_competitive():
+    rng = np.random.default_rng(1)
+    T, n = 6, 6
+    tr = _traces(T, n, rng, f=3.0)
+    adj = fully_connected(n)
+    D = np.full((T, n), 30.0)
+    plan = mv.solve_convex(tr, adj, D, error_model="sqrt", gamma=5.0,
+                           iters=400)
+    plan.check(adj)
+    # must be no worse than both all-process and all-discard vertices
+    val = mv.plan_cost(plan, tr, D, error_model="sqrt", gamma=5.0)["total"]
+    base = mv.plan_cost(mv.no_movement_plan(T, n), tr, D,
+                        error_model="sqrt", gamma=5.0)["total"]
+    all_disc = mv.MovementPlan(s=np.zeros((T, n, n)), r=np.ones((T, n)))
+    disc = mv.plan_cost(all_disc, tr, D, error_model="sqrt", gamma=5.0)["total"]
+    assert val <= base * 1.02
+    assert val <= disc * 1.02
+
+
+def test_theorem4_closed_form_matches_numeric():
+    """Thm 4 stationary point vs numeric optimization of the same
+    hierarchical objective."""
+    from scipy import optimize as so
+
+    n = 4
+    rng = np.random.default_rng(0)
+    c = rng.uniform(0.5, 1.0, n)
+    c_srv, c_t, gamma = 0.1, 0.05, 2.0
+    D = np.full(n, 1000.0)
+    r_star, s_star = mv.theorem4_closed_form(c, c_srv, c_t, gamma, D)
+
+    def obj(z):
+        r, s = z[:n], z[n:]
+        keep = (1 - r - s) * D
+        if np.any(keep <= 0) or np.any(s < 0) or (s * D).sum() <= 0:
+            return 1e12
+        return ((keep * c).sum() + (s * D).sum() * (c_srv + c_t)
+                + (gamma / np.sqrt(keep)).sum()
+                + gamma / np.sqrt((s * D).sum()))
+
+    z0 = np.concatenate([r_star, s_star])
+    res = so.minimize(obj, z0, method="Nelder-Mead",
+                      options={"maxiter": 20000, "xatol": 1e-10,
+                               "fatol": 1e-12})
+    # closed form should already be (near-)stationary
+    assert obj(z0) <= res.fun * 1.01 + 1e-9
+
+
+def test_processed_respects_one_round_transfer_delay():
+    T, n = 3, 2
+    s = np.zeros((T, n, n))
+    r = np.zeros((T, n))
+    s[0, 0, 1] = 1.0   # node 0 offloads everything at t=0
+    s[0, 1, 1] = 1.0
+    s[1:, :, :] = np.eye(n)[None]
+    D = np.array([[10.0, 5.0], [0.0, 0.0], [0.0, 0.0]])
+    G = mv.MovementPlan(s=s, r=r).processed(D)
+    assert G[0, 1] == 5.0          # own data at t=0
+    assert G[1, 1] == 10.0         # offloaded data arrives at t=1
+    assert G[0, 0] == 0.0 and G[1, 0] == 0.0
+
+
+def test_no_offload_in_final_round():
+    rng = np.random.default_rng(7)
+    tr = _traces(5, 6, rng)
+    plan = mv.greedy_linear(tr, fully_connected(6))
+    off = plan.s[-1] * (1 - np.eye(6))
+    assert off.sum() == 0.0

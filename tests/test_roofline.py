@@ -1,0 +1,96 @@
+"""Analytic roofline model sanity: parameter counts vs spec-tree counts,
+term positivity, family-specific structure, shape-kind behavior."""
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import all_archs, get_config
+from repro.launch import steps as St
+from repro.launch.roofline import (analytic_roofline, dominant_term,
+                                   params_total_active)
+from repro.models import transformer as T
+from repro.models.module import param_count
+
+MESH = (16, 16)
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_analytic_param_count_matches_spec_tree(arch):
+    cfg = get_config(arch)
+    total, active = params_total_active(cfg)
+    spec_total = param_count(T.specs(cfg))
+    assert total == pytest.approx(spec_total, rel=0.02), (arch, total,
+                                                          spec_total)
+    assert active <= total + 1
+
+
+@pytest.mark.parametrize("arch", all_archs())
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_roofline_terms_positive_and_finite(arch, shape):
+    cfg = St.config_for_shape(get_config(arch), INPUT_SHAPES[shape])
+    r = analytic_roofline(cfg, INPUT_SHAPES[shape], MESH)
+    for k in ("compute_s", "memory_s", "collective_s", "flops_useful",
+              "flops_hw", "bytes_hbm_dev", "bytes_coll_dev"):
+        assert np.isfinite(r[k]) and r[k] >= 0, (k, r[k])
+    assert 0 < r["mfu_bound"] <= 1.0 + 1e-9, r["mfu_bound"]
+    assert dominant_term(r) in ("compute_s", "memory_s", "collective_s")
+
+
+def test_decode_is_memory_bound_everywhere():
+    for arch in all_archs():
+        for shape in ("decode_32k", "long_500k"):
+            cfg = St.config_for_shape(get_config(arch), INPUT_SHAPES[shape])
+            r = analytic_roofline(cfg, INPUT_SHAPES[shape], MESH)
+            assert dominant_term(r) != "compute_s", (arch, shape)
+
+
+def test_train_flops_3x_prefill_plus_remat():
+    cfg = St.config_for_shape(get_config("phi4-mini-3.8b"),
+                              INPUT_SHAPES["train_4k"])
+    r_train = analytic_roofline(cfg, INPUT_SHAPES["train_4k"], MESH)
+    # same token count, forward only
+    import dataclasses
+
+    pf = dataclasses.replace(INPUT_SHAPES["train_4k"], kind="prefill")
+    cfg_f = cfg.with_overrides(remat="none")
+    r_fwd = analytic_roofline(cfg_f, pf, MESH)
+    ratio = r_train["flops_hw"] / r_fwd["flops_hw"]
+    assert 3.9 <= ratio <= 4.1, ratio  # 3x bwd+fwd x 4/3 remat
+
+
+def test_swa_caps_decode_context():
+    cfg = get_config("mixtral-8x7b")
+    r = analytic_roofline(cfg, INPUT_SHAPES["long_500k"], MESH)
+    cfg_big = cfg.with_overrides(sliding_window=None)
+    r_big = analytic_roofline(St.config_for_shape(cfg_big,
+                                                  INPUT_SHAPES["long_500k"]),
+                              INPUT_SHAPES["long_500k"], MESH)
+    # the config_for_shape override re-adds a window, so compare raw flops
+    assert r["flops_hw"] <= r_big["flops_hw"] + 1
+
+
+def test_ssm_decode_state_constant_in_context():
+    cfg = get_config("mamba2-1.3b")
+    r32 = analytic_roofline(cfg, INPUT_SHAPES["decode_32k"], MESH)
+    r500 = analytic_roofline(cfg, INPUT_SHAPES["long_500k"], MESH)
+    # per-token SSM decode cost independent of context length
+    per_tok_32 = r32["flops_hw"] / INPUT_SHAPES["decode_32k"].global_batch
+    per_tok_500 = r500["flops_hw"] / INPUT_SHAPES["long_500k"].global_batch
+    assert per_tok_500 == pytest.approx(per_tok_32, rel=0.01)
+
+
+def test_config_for_shape_rules():
+    # long_500k forces SWA variant on pure-dense archs
+    cfg = St.config_for_shape(get_config("qwen3-14b"),
+                              INPUT_SHAPES["long_500k"])
+    assert cfg.sliding_window == 4096
+    # ...but not on SSM/hybrid/SWA archs
+    for arch in ("mamba2-1.3b", "zamba2-7b"):
+        c = St.config_for_shape(get_config(arch), INPUT_SHAPES["long_500k"])
+        assert not c.sliding_window
+    c = St.config_for_shape(get_config("mixtral-8x7b"),
+                            INPUT_SHAPES["long_500k"])
+    assert c.sliding_window == 4096  # its own native window
+    # train gets remat
+    c = St.config_for_shape(get_config("qwen3-14b"), INPUT_SHAPES["train_4k"])
+    assert c.remat == "full"

@@ -1,0 +1,154 @@
+"""Optimizers, checkpointing, estimator, costs, topology."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import estimator as est
+from repro.core.costs import (effective_link_costs, ici_costs,
+                              synthetic_costs, testbed_like_costs,
+                              with_capacity)
+from repro.core.topology import ChurnProcess, make_topology
+from repro.optim import optimizers as opt_lib
+
+
+# -- optimizers --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,lr", [("sgd", 0.1), ("momentum", 0.05),
+                                     ("adamw", 0.1)])
+def test_optimizer_converges_on_quadratic(name, lr):
+    opt = opt_lib.get_optimizer(name, lr)
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(5.0)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        ups, state = opt.update(g, state, params)
+        params = opt_lib.apply_updates(params, ups)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = opt_lib.clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    assert float(opt_lib.global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_cosine_schedule_shape():
+    f = opt_lib.cosine_schedule(1.0, warmup=10, total=100)
+    assert float(f(jnp.array(0))) == pytest.approx(0.0)
+    assert float(f(jnp.array(10))) == pytest.approx(1.0)
+    assert float(f(jnp.array(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+# -- checkpoint --------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((3,), jnp.bfloat16),
+                       "c": jnp.array(7, jnp.int32)}}
+    path = os.path.join(tmp_path, "ck.msgpack")
+    ckpt.save(path, tree, {"step": 5})
+    out, meta = ckpt.restore(path, tree)
+    assert meta["step"] == 5
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = os.path.join(tmp_path, "ck.msgpack")
+    ckpt.save(path, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(path, {"a": jnp.zeros((3,))})
+
+
+# -- estimator ---------------------------------------------------------------
+
+
+def test_estimator_uses_previous_window_average():
+    rng = np.random.default_rng(0)
+    tr = synthetic_costs(4, 20, rng)
+    hat = est.estimate_traces(tr, L=4)
+    # window 1 (t=5..9) sees the average of window 0 (t=0..4)
+    np.testing.assert_allclose(hat.c_node[7], tr.c_node[0:5].mean(0))
+    np.testing.assert_allclose(hat.c_link[12], tr.c_link[5:10].mean(0))
+    # window 0 is the prior
+    assert np.all(hat.c_node[0] == 0.5)
+
+
+def test_estimate_counts():
+    D = np.arange(20, dtype=float).reshape(10, 2)
+    Dh = est.estimate_counts(D, L=5)
+    np.testing.assert_allclose(Dh[2], D[0:2].mean(0))
+    assert Dh.shape == D.shape
+
+
+# -- costs / topology --------------------------------------------------------
+
+
+def test_testbed_costs_correlated():
+    """The paper's key observation: compute and link costs correlate on
+    real hardware."""
+    rng = np.random.default_rng(0)
+    tr = testbed_like_costs(30, 50, rng)
+    c_dev = tr.c_node.mean(0)
+    c_out = tr.c_link.mean(axis=(0, 2))
+    corr = np.corrcoef(c_dev, c_out)[0, 1]
+    assert corr > 0.5
+    assert tr.c_node.min() >= 0 and tr.c_node.max() <= 1.0 + 1e-9
+
+
+def test_effective_link_costs_fold_f():
+    rng = np.random.default_rng(0)
+    tr = synthetic_costs(3, 5, rng)
+    tr.f_err[:] = np.linspace(1, 0.5, 5)[:, None]
+    eff = effective_link_costs(tr, f_shift=True)
+    want = tr.c_link[0, 0, 1] + tr.f_err[0, 0] - tr.f_err[1, 1]
+    assert eff[0, 0, 1] == pytest.approx(want)
+
+
+def test_ici_costs_magnitudes():
+    tr = ici_costs(8, 4, bytes_per_point=8192, flops_per_point=1e9)
+    assert tr.c_link[0, 0, 1] == pytest.approx(8192 / 50e9)
+    assert tr.c_node[0, 0] == pytest.approx(1e9 / 197e12)
+
+
+@pytest.mark.parametrize("kind", ["full", "random", "hierarchical",
+                                  "social", "scale_free"])
+def test_topologies_valid(kind):
+    rng = np.random.default_rng(1)
+    n = 20
+    adj = make_topology(kind, n, rng, rho=0.3,
+                        costs=rng.random(n))
+    assert adj.shape == (n, n) and adj.dtype == bool
+    assert not np.any(np.diag(adj))
+    if kind == "full":
+        assert adj.sum() == n * (n - 1)
+    if kind == "hierarchical":
+        # leaves point at servers: out-degree <= 2 for non-servers
+        assert adj.sum(1).max() <= max(2, n // 3)
+
+
+def test_churn_process_waiting_logic():
+    rng = np.random.default_rng(0)
+    p = ChurnProcess(50, p_exit=0.5, p_entry=0.5, rng=rng)
+    p.active[:] = False
+    p.step()
+    # re-entered nodes must be waiting until sync
+    entered = p.active
+    assert np.all(p.waiting[entered])
+    assert not np.any(p.contributing() & p.waiting)
+    p.sync()
+    assert not np.any(p.waiting)

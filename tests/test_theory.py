@@ -1,0 +1,123 @@
+"""Validate the executable theory (Thms 1/2/5/6, Lemma 1) against
+Monte-Carlo / numeric ground truth."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory as th
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.5, 5.0), st.integers(1, 12))
+def test_theorem5_matches_monte_carlo(C, k):
+    rng = np.random.default_rng(k * 1000)
+    closed = th.theorem5_savings_k(C, k)
+    mc = th.expected_savings_mc(C, k, rng, n_samples=400_000)
+    assert closed == pytest.approx(mc, rel=0.05, abs=0.01 * C)
+
+
+def test_theorem5_savings_linear_in_C():
+    """Paper: reduction in cost is approximately linear in C."""
+    hist = th.scale_free_degree_hist(50)
+    s1 = th.theorem5_network_savings(1.0, hist)
+    s2 = th.theorem5_network_savings(2.0, hist)
+    s4 = th.theorem5_network_savings(4.0, hist)
+    assert s2 == pytest.approx(2 * s1, rel=1e-9)
+    assert s4 == pytest.approx(4 * s1, rel=1e-9)
+    assert 0 < s1 < 0.5  # savings below the mean cost C/2
+
+
+def test_theorem5_increasing_in_degree():
+    vals = [th.theorem5_savings_k(1.0, k) for k in range(1, 10)]
+    assert all(b > a for a, b in zip(vals, vals[1:]))
+    assert all(v < 0.5 for v in vals)   # bounded by C/2
+
+
+def test_dm1_wait_matches_simulation():
+    """D/M/1: deterministic arrivals (rate C), exp(mu) service."""
+    mu, C = 1.0, 0.6
+    want = th.dm1_wait(C, mu)
+    rng = np.random.default_rng(0)
+    n = 200_000
+    inter = 1.0 / C
+    t_arrive = np.arange(n) * inter
+    service = rng.exponential(1.0 / mu, n)
+    start = np.empty(n)
+    finish = np.empty(n)
+    start[0], finish[0] = t_arrive[0], t_arrive[0] + service[0]
+    for i in range(1, n):
+        start[i] = max(t_arrive[i], finish[i - 1])
+        finish[i] = start[i] + service[i]
+    sim_wait = float(np.mean(start[n // 10:] - t_arrive[n // 10:]))
+    assert want == pytest.approx(sim_wait, rel=0.05)
+
+
+def test_theorem2_capacity_achieves_wait_target():
+    for mu in (0.5, 1.0, 3.0):
+        for sigma in (0.5, 1.0, 2.0):
+            C = th.theorem2_capacity(mu, sigma)
+            assert th.dm1_wait(C, mu) == pytest.approx(sigma, rel=1e-3)
+            # monotone: larger capacity -> longer waits
+            assert th.dm1_wait(C * 1.2, mu) > sigma
+
+
+def test_phi_increasing_in_C():
+    mu = 1.0
+    phis = [th.dm1_phi(C, mu) for C in (0.2, 0.4, 0.6, 0.8)]
+    assert all(b > a for a, b in zip(phis, phis[1:]))
+
+
+def test_theorem1_bound_decreasing_in_aggregations():
+    """More frequent aggregation (smaller τ) tightens the bound at fixed t
+    (paper §V-C3 / Fig 7 trend)."""
+    kw = dict(delta_i=0.5, beta=2.0, eta=0.4, rho=1.0, omega=0.5)
+    t = 120
+    bounds = [th.theorem1_bound(t, tau, **kw) for tau in (5, 10, 30, 60)]
+    assert all(b2 >= b1 * 0.999 for b1, b2 in zip(bounds, bounds[1:])), bounds
+    assert all(b > 0 for b in bounds)
+
+
+def test_theorem1_bound_decreasing_in_t():
+    kw = dict(delta_i=0.2, beta=2.0, eta=0.4, rho=1.0, omega=0.5)
+    b1 = th.theorem1_bound(50, 10, **kw)
+    b2 = th.theorem1_bound(500, 10, **kw)
+    assert b2 < b1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1.0, 1e4), st.floats(0.1, 10.0))
+def test_lemma1_decreasing_in_G(G, gamma_i):
+    d1 = th.lemma1_delta(G, gamma_i, 1.0, 1e6, 0.1)
+    d2 = th.lemma1_delta(G * 4, gamma_i, 1.0, 1e6, 0.1)
+    assert d2 < d1
+    assert d1 == pytest.approx(gamma_i / math.sqrt(G) + 1.0 / 1e3 + 0.1)
+
+
+def test_theorem6_violations_monte_carlo():
+    """Expected violation count vs direct simulation of the Thm-3 policy
+    on a k-regular random graph with ample discard cost."""
+    n, k, D = 200, 4, 10.0
+    rng = np.random.default_rng(0)
+    cap_samples = rng.uniform(5, 25, 100_000)
+    hist = {k: 1.0}
+    expected = th.theorem6_expected_violations(hist, n, D, cap_samples)
+
+    # simulate
+    trials, viol = 40, 0.0
+    for _ in range(trials):
+        caps = rng.uniform(5, 25, n)
+        costs = rng.random(n)
+        # k-regular ring neighbors
+        nbrs = [[(i + d) % n for d in range(1, k + 1)] for i in range(n)]
+        load = np.zeros(n)
+        for i in range(n):
+            j = min(nbrs[i], key=lambda j: costs[j])
+            if costs[j] < costs[i]:
+                load[j] += D
+            else:
+                load[i] += D
+        viol += (load > caps).sum()
+    sim = viol / trials
+    assert expected == pytest.approx(sim, rel=0.35, abs=5.0)
