@@ -58,6 +58,43 @@ def make_plan(setting: str, traces, adj, D, error_model="discard",
     return plan
 
 
+def batched_convex_plans(scenarios, *, error_model="sqrt", gamma=1.0,
+                         iters=400, seed=0):
+    """Solve a sweep of (traces, adj, D) scenarios in ONE vmapped
+    compiled program (all scenarios must share (T, n)) — the batched
+    path for cost/topology sweeps that previously re-ran the convex
+    solver once per point."""
+    traces, adjs, Ds = zip(*scenarios)
+    return mv.solve_convex_batched(list(traces), list(adjs), list(Ds),
+                                   error_model=error_model, gamma=gamma,
+                                   iters=iters, seeds=seed)
+
+
+def convex_sweep_costs(n, T, *, f_errs=(0.3, 0.7), media=("wifi", "lte"),
+                       error_model="sqrt", iters=400, seed=0):
+    """Cost sweep (error weight × medium) solved as one batched program.
+
+    Returns rows of {f_err, medium, cost decomposition} — the batched
+    counterpart of looping ``fog_experiment`` over cost settings."""
+    rng = np.random.default_rng(seed)
+    adj = make_topology("full", n, rng)
+    scenarios, keys = [], []
+    for f_err in f_errs:
+        for medium in media:
+            tr = testbed_like_costs(n, T, np.random.default_rng(seed),
+                                    f_err=f_err, medium=medium)
+            D = np.full((T, n), 20.0)
+            scenarios.append((tr, adj, D))
+            keys.append({"f_err": f_err, "medium": medium})
+    plans = batched_convex_plans(scenarios, error_model=error_model,
+                                 iters=iters, seed=seed)
+    rows = []
+    for key, plan, (tr, _, D) in zip(keys, plans, scenarios):
+        rows.append({**key, **mv.plan_cost(plan, tr, D,
+                                           error_model=error_model)})
+    return rows
+
+
 def fog_experiment(*, scale: BenchScale, n=10, model="mlp", iid=True,
                    costs="testbed", topology="full", rho=1.0,
                    setting="B", error_model="discard", medium="wifi",

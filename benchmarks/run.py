@@ -390,6 +390,132 @@ def solver_scaling(scale):
 
 
 @bench
+def engine_throughput(scale):
+    """Scan-compiled engine vs the legacy per-round loop (rounds/sec at
+    n=10, T=40, mlp) plus movement-solver wall time: batched min-plus
+    greedy vs the seed per-round loop and the pure-Python nested-loop
+    reference, at n=512, T=50. Writes results/bench_engine.json — the
+    first point of the perf trajectory."""
+    import jax
+
+    from repro.core import engine as eng
+    from repro.core import movement as mv
+    from repro.core.costs import synthetic_costs
+    from repro.core.topology import fully_connected
+    from repro.data import pipeline as pl2
+
+    t0 = time.time()
+    n, T, tau, eta, model = 10, 40, 5, 0.1, "mlp"
+    x_tr, y_tr, x_te, y_te = dataset(scale.n_train, scale.n_test)
+    # paper-scale fog stream density (~2 samples/device/round: 60k over
+    # 125 devices x 240 rounds) and a small eval split: the bench
+    # measures engine throughput, not eval FLOPs
+    x_ev = np.ascontiguousarray(x_te[:256])
+    y_ev = np.ascontiguousarray(y_te[:256])
+    rng = np.random.default_rng(0)
+    traces = synthetic_costs(n, T, rng)
+    adj = fully_connected(n)
+    streams = pl2.poisson_streams(n, T, y_tr, rng=rng, mean_per_round=2.0)
+    plan = mv.greedy_linear(traces, adj)
+    processed = pl2.apply_movement(streams, plan, rng)
+    max_pts = pl2.pad_size(processed)
+    act = np.ones((T, n), bool)
+    params, apply_fn = eng.make_model(model, jax.random.PRNGKey(0))
+
+    def run(runner):
+        return runner(apply_fn, params, x_tr, y_tr, x_ev, y_ev, processed,
+                      act, tau, eta, max_pts)
+
+    run(eng.run_rounds_legacy)            # warm both paths
+    h_scan = run(eng.run_rounds_scan)
+    legacy_s, scan_s = [], []
+    for _ in range(3):
+        t = time.time()
+        h_legacy = run(eng.run_rounds_legacy)
+        legacy_s.append(time.time() - t)
+        t = time.time()
+        h_scan = run(eng.run_rounds_scan)
+        scan_s.append(time.time() - t)
+    legacy_s, scan_s = sorted(legacy_s)[1], sorted(scan_s)[1]   # medians
+    acc_gap = max(abs(a - b) for a, b in
+                  zip(h_legacy["test_acc"], h_scan["test_acc"]))
+
+    n2, T2 = 512, 50
+    tr2 = synthetic_costs(n2, T2, np.random.default_rng(1))
+    adj2 = fully_connected(n2)
+    t = time.time()
+    p_scalar = mv.greedy_linear_scalar(tr2, adj2)
+    scalar_s = time.time() - t
+    t = time.time()
+    p_loop = mv.greedy_linear_loop(tr2, adj2)
+    loop_s = time.time() - t
+    t = time.time()
+    p_vec = mv.greedy_linear(tr2, adj2)
+    vec_s = time.time() - t
+    identical = bool(np.array_equal(p_scalar.s, p_vec.s)
+                     and np.array_equal(p_loop.s, p_vec.s)
+                     and np.array_equal(p_loop.r, p_vec.r))
+
+    derived = {
+        "engine": {"n": n, "T": T, "model": model,
+                   "legacy_s": legacy_s, "scan_s": scan_s,
+                   "legacy_rounds_per_s": T / legacy_s,
+                   "scan_rounds_per_s": T / scan_s,
+                   "acc_curve_gap": acc_gap},
+        "movement": {"n": n2, "T": T2,
+                     "python_nested_loop_s": scalar_s,
+                     "seed_per_round_loop_s": loop_s,
+                     "vectorized_s": vec_s,
+                     "identical_plan": identical},
+        "headline": {
+            "engine_speedup": legacy_s / scan_s,
+            "scan_rounds_per_s": T / scan_s,
+            "greedy_speedup_vs_python_loop": scalar_s / vec_s,
+            "greedy_speedup_vs_seed_loop": loop_s / vec_s,
+            "greedy_identical_plan": identical}}
+    _emit("engine", time.time() - t0, derived)
+
+
+@bench
+def convex_batched(scale):
+    """Batched (vmapped) convex movement sweep vs one-solve-per-point:
+    same plans from one compiled program."""
+    from repro.core import movement as mv
+    from repro.core.costs import testbed_like_costs
+    from repro.core.topology import make_topology
+
+    from benchmarks.fog import batched_convex_plans, convex_sweep_costs
+
+    t0 = time.time()
+    n, T, iters = 10, 12, 300
+    rng = np.random.default_rng(0)
+    adj = make_topology("full", n, rng)
+    scenarios = [(testbed_like_costs(n, T, np.random.default_rng(0),
+                                     f_err=f_err, medium=medium),
+                  adj, np.full((T, n), 20.0))
+                 for f_err in (0.3, 0.7) for medium in ("wifi", "lte")]
+
+    # warm both jit caches so the comparison is program time, not compile
+    mv.solve_convex(*scenarios[0], error_model="sqrt", iters=iters)
+    batched_convex_plans(scenarios, error_model="sqrt", iters=iters)
+    t = time.time()
+    seq = [mv.solve_convex(tr, a, D, error_model="sqrt", iters=iters)
+           for tr, a, D in scenarios]
+    seq_s = time.time() - t
+    t = time.time()
+    bat = batched_convex_plans(scenarios, error_model="sqrt", iters=iters)
+    bat_s = time.time() - t
+    gap = max(float(np.abs(p.s - q.s).max()) for p, q in zip(seq, bat))
+    rows = convex_sweep_costs(n, T, iters=100)
+    derived = {"rows": rows,
+               "headline": {"n_scenarios": len(scenarios),
+                            "sequential_s": seq_s, "batched_s": bat_s,
+                            "speedup": seq_s / bat_s,
+                            "max_plan_gap": gap}}
+    _emit("convex_batched", time.time() - t0, derived)
+
+
+@bench
 def dryrun_roofline(scale):
     """Summarize the 80-combo dry-run baseline into the roofline table."""
     t0 = time.time()

@@ -1,4 +1,4 @@
-"""Network-aware federated learning engine (paper §III-B + §V).
+"""Network-aware federated learning (paper §III-B + §V).
 
 Paper-faithful scale: every fog device i holds its own parameters w_i(t),
 realized as a stacked pytree with a leading device axis and a vmapped
@@ -7,24 +7,30 @@ over contributing devices every τ rounds, followed by synchronization.
 Data offloading/discarding is applied to the physical sample streams by
 ``data/pipeline.apply_movement`` before training.
 
+The training loop itself lives in :mod:`repro.core.engine`:
+``run_network_aware`` is a thin wrapper that prepares the sample streams
+on the host and dispatches to the scan-compiled engine (default) or the
+legacy per-round loop (``engine="legacy"``, kept as oracle/baseline).
+
 Baselines: ``centralized`` (all data at one node) and ``federated``
 (no movement, G_i = D_i) — both used by the Table II/III benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine as eng
 from repro.core import movement as mv
 from repro.core.costs import CostTraces
+from repro.core.engine import (_stack, _sync, aggregate,  # noqa: F401
+                               make_device_step, make_model)
 from repro.core.topology import ChurnProcess
 from repro.data import pipeline as pl
 from repro.models import mnist as mm
-from repro.models.module import init_params
 
 
 @dataclasses.dataclass
@@ -42,64 +48,22 @@ class FedConfig:
     eval_every: int = 10
 
 
-def make_model(name: str, rng):
-    specs_fn, apply_fn = mm.MODELS[name]
-    params = init_params(specs_fn(), rng, jnp.float32)
-    return params, apply_fn
-
-
-def _stack(params, n):
-    return jax.tree_util.tree_map(
-        lambda p: jnp.broadcast_to(p, (n, *p.shape)).copy(), params)
-
-
-def make_device_step(apply_fn, eta):
-    def one(params, xb, yb, w, active):
-        def lf(p):
-            return mm.ce_loss(apply_fn(p, xb), yb, w)
-
-        loss, g = jax.value_and_grad(lf)(params)
-        scale = active * jnp.minimum(w.sum(), 1.0)   # no data -> no update
-        new = jax.tree_util.tree_map(lambda p, gg: p - eta * scale * gg,
-                                     params, g)
-        return new, loss
-
-    return jax.jit(jax.vmap(one))
-
-
-def aggregate(W, H: jnp.ndarray, contributing: jnp.ndarray, prev_global):
-    """Eq. (4): w(k) = Σ H_i w_i / Σ H_i over contributing devices."""
-    Hc = H * contributing
-    tot = Hc.sum()
-
-    def agg(a):
-        return jnp.where(tot > 0,
-                         jnp.einsum("n...,n->...", a, Hc) / jnp.maximum(tot, 1e-9),
-                         0.0)
-
-    w_new = jax.tree_util.tree_map(agg, W)
-    if prev_global is not None:
-        w_new = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(tot > 0, new, old), w_new, prev_global)
-    return w_new
-
-
-def _sync(W, w_global, active):
-    def s(stack, g):
-        mask = active.reshape((-1,) + (1,) * g.ndim)
-        return jnp.where(mask, g[None], stack)
-
-    return jax.tree_util.tree_map(s, W, w_global)
-
-
 def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                       adj: np.ndarray, plan: mv.MovementPlan,
                       streams: pl.FogStreams | None = None,
-                      activity: np.ndarray | None = None) -> dict:
+                      activity: np.ndarray | None = None,
+                      engine: str = "scan") -> dict:
     """Train with a given movement plan. Returns history dict.
 
     ``activity`` (T, n) bool — optional churn trace (§V-E); inactive
     devices collect nothing, don't train, and miss aggregations.
+    ``engine`` — "scan" (one compiled lax.scan over all rounds) or
+    "legacy" (the original per-round loop).
+
+    The scan engine pins ``x_tr``/``x_te``/``y_te`` device-resident
+    across calls (keyed by identity + a sampled checksum): treat the
+    arrays in ``data`` as immutable between calls — a sparse in-place
+    edit that slips past the checksum would train on stale pixels.
     """
     x_tr, y_tr, x_te, y_te = data
     rng = np.random.default_rng(cfg.seed)
@@ -112,21 +76,13 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                 if not activity[t, i]:
                     streams.collected[t][i] = np.empty(0, np.int64)
     processed = pl.apply_movement(streams, plan, rng)
-    max_pts = cfg.max_points or max(
-        (len(ix) for row in processed for ix in row), default=1) or 1
+    max_pts = pl.pad_size(processed, cfg.max_points)
 
     key = jax.random.PRNGKey(cfg.seed)
     w_global, apply_fn = make_model(cfg.model, key)
-    W = _stack(w_global, cfg.n)
-    step = make_device_step(apply_fn, cfg.eta)
-    eval_fn = jax.jit(lambda p, x, y: (
-        mm.ce_loss(apply_fn(p, x), y), mm.accuracy(apply_fn(p, x), y)))
 
-    H = np.zeros(cfg.n)
-    waiting = np.zeros(cfg.n, bool)
-    hist = {"round": [], "device_loss": [], "test_acc": [], "test_loss": [],
-            "agg_round": [], "active": [], "processed_counts": [],
-            "sim_before": None, "sim_after": None}
+    hist = {"round": list(range(cfg.T)), "sim_before": None,
+            "sim_after": None}
 
     # data-similarity before/after movement (Fig. 4b), non-i.i.d. diagnostics
     col_labels = [np.concatenate([y_tr[ix] for row in streams.collected
@@ -138,30 +94,20 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     hist["sim_before"] = pl.label_similarity(col_labels)
     hist["sim_after"] = pl.label_similarity(proc_labels)
 
-    for t in range(cfg.T):
-        act = activity[t] if activity is not None else np.ones(cfg.n, bool)
-        xb, yb, wts = pl.pad_batches(processed[t], x_tr, y_tr, max_pts)
-        W, losses = step(W, jnp.asarray(xb), jnp.asarray(yb),
-                         jnp.asarray(wts),
-                         jnp.asarray(act & ~waiting, jnp.float32))
-        H += np.array([len(ix) for ix in processed[t]]) * (act & ~waiting)
-        hist["round"].append(t)
-        hist["device_loss"].append(np.asarray(losses))
-        hist["active"].append(act.copy())
-        hist["processed_counts"].append(
-            [len(ix) for ix in processed[t]])
+    act_all = (np.asarray(activity, bool) if activity is not None
+               else np.ones((cfg.T, cfg.n), bool))
+    hist["active"] = [act_all[t].copy() for t in range(cfg.T)]
+    hist["processed_counts"] = [[len(ix) for ix in processed[t]]
+                                for t in range(cfg.T)]
 
-        if (t + 1) % cfg.tau == 0:
-            contributing = jnp.asarray(act & ~waiting, jnp.float32)
-            w_global = aggregate(W, jnp.asarray(H, jnp.float32),
-                                 contributing, w_global)
-            W = _sync(W, w_global, jnp.asarray(act))
-            waiting = ~act          # whoever is out now waits for next sync
-            H[:] = 0.0
-            tl, ta = eval_fn(w_global, jnp.asarray(x_te), jnp.asarray(y_te))
-            hist["agg_round"].append(t)
-            hist["test_loss"].append(float(tl))
-            hist["test_acc"].append(float(ta))
+    runners = {"scan": eng.run_rounds_scan,
+               "legacy": eng.run_rounds_legacy}
+    if engine not in runners:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"expected one of {sorted(runners)}")
+    runner = runners[engine]
+    hist.update(runner(apply_fn, w_global, x_tr, y_tr, x_te, y_te,
+                       processed, act_all, cfg.tau, cfg.eta, max_pts))
     return hist
 
 

@@ -10,7 +10,11 @@ Solvers:
 * ``greedy_linear``   — Theorem 3 closed form for the linear discard cost
   f_i(t)·D_i(t)·r_i(t): each datapoint takes the least-marginal-cost option
   among {process: c_i(t), offload→k: c_ik(t)+c_k(t+1), discard: f_i(t)}
-  with k = argmin_j c_ij(t)+c_j(t+1) over out-neighbors. O(T·n²).
+  with k = argmin_j c_ij(t)+c_j(t+1) over out-neighbors. Implemented as
+  one batched min-plus reduction over all T rounds (vectorized numpy by
+  default; the Pallas ``kernels/offload_greedy`` kernel as the large-n
+  accelerator backend). ``greedy_linear_loop`` keeps the original
+  per-(t, i) Python loop as oracle/baseline.
 * ``repair_capacities`` — Theorem 6's guidance: when expected violations
   are few, locally repair the greedy solution (cap link transfers, spill
   overflow to the node's next-best option) instead of a full re-solve.
@@ -75,7 +79,114 @@ def _adj_t(adj: np.ndarray, T: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def greedy_linear(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
+# dispatch to the Pallas min-plus kernel above this n (accelerators only;
+# on CPU the kernel runs in interpret mode and vectorized numpy wins)
+PALLAS_MIN_N = 256
+
+
+def _plan_from_choice(choice: np.ndarray, k: np.ndarray) -> MovementPlan:
+    """(T, n) 3-way decisions + best-neighbor indices -> bang-bang plan."""
+    T, n = choice.shape
+    s = np.zeros((T, n, n))
+    r = np.zeros((T, n))
+    tt, ii = np.nonzero(choice == 0)
+    s[tt, ii, ii] = 1.0
+    tt, ii = np.nonzero(choice == 1)
+    s[tt, ii, k[tt, ii]] = 1.0
+    r[choice == 2] = 1.0
+    return MovementPlan(s=s, r=r)
+
+
+def greedy_linear(traces: CostTraces, adj: np.ndarray, *,
+                  backend: str = "auto") -> MovementPlan:
+    """Theorem 3 rule as one batched min-plus over all T rounds.
+
+    backend: "numpy" (vectorized, default), "jnp" / "pallas" (device
+    batched kernel via ``kernels.ops.greedy_decision_batched``), or
+    "auto" (pallas on accelerators when n ≥ PALLAS_MIN_N and tileable).
+    """
+    T, n = traces.c_node.shape
+    if backend == "auto":
+        backend = ("pallas" if jax.default_backend() != "cpu"
+                   and n >= PALLAS_MIN_N and n % 128 == 0 else "numpy")
+    if backend in ("jnp", "pallas"):
+        return _greedy_linear_device(traces, adj,
+                                     use_pallas=backend == "pallas")
+    # row-vectorized min-plus with a single reused (n, n) buffer: never
+    # materializes the (T, n, n) effective-cost tensor (fresh-page writes
+    # dominate wall time at fog scale), and the buffer stays cache-hot
+    c_next = np.concatenate([traces.c_node[1:], traces.c_node[-1:]])
+    dg = np.arange(n)
+    eye = np.eye(n, dtype=bool)
+    invalid = None if adj.ndim == 3 else ~adj | eye
+    inv_buf = np.empty((n, n), bool) if adj.ndim == 3 else None
+    k = np.zeros((T, n), np.int64)
+    off_cost = np.full((T, n), np.inf)   # T-1: no off-horizon offloading
+    buf = np.empty((n, n))
+    for t in range(T - 1):
+        np.add(traces.c_link[t], c_next[t][None, :], out=buf)
+        if invalid is None:              # time-varying graph, reuse bufs
+            np.logical_not(adj[t], out=inv_buf)
+            np.logical_or(inv_buf, eye, out=inv_buf)
+            buf[inv_buf] = np.inf
+        else:
+            buf[invalid] = np.inf
+        k[t] = buf.argmin(axis=1)                          # best neighbor
+        off_cost[t] = buf[dg, k[t]]
+    choice = np.argmin(
+        np.stack([traces.c_node, off_cost, traces.f_err]), axis=0)
+    return _plan_from_choice(choice, k)
+
+
+def _greedy_linear_device(traces: CostTraces, adj: np.ndarray, *,
+                          use_pallas: bool) -> MovementPlan:
+    from repro.kernels import ops
+
+    T, n = traces.c_node.shape
+    adj3 = _adj_t(adj, T).copy()
+    adj3[T - 1] = False    # no off-horizon offloading in the final round
+    c_next = np.concatenate([traces.c_node[1:], traces.c_node[-1:]])
+    choice, best_j, _ = ops.greedy_decision_batched(
+        jnp.asarray(traces.c_link, jnp.float32),
+        jnp.asarray(c_next, jnp.float32),
+        jnp.asarray(traces.c_node, jnp.float32),
+        jnp.asarray(traces.f_err, jnp.float32),
+        jnp.asarray(adj3), use_pallas=use_pallas)
+    return _plan_from_choice(np.asarray(choice), np.asarray(best_j))
+
+
+def greedy_linear_scalar(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
+    """Textbook pure-Python nested-loop Theorem-3 rule: one interpreter
+    iteration per (t, i, j). The interpreter-bound baseline the batched
+    min-plus replaces — benchmark reference only."""
+    T, n = traces.c_node.shape
+    adj3 = _adj_t(adj, T)
+    s = np.zeros((T, n, n))
+    r = np.zeros((T, n))
+    for t in range(T):
+        for i in range(n):
+            best_j, best_off = -1, np.inf
+            if t < T - 1:
+                for j in range(n):
+                    if j == i or not adj3[t, i, j]:
+                        continue
+                    c = traces.c_link[t, i, j] + traces.c_node[t + 1, j]
+                    if c < best_off:
+                        best_j, best_off = j, c
+            proc = traces.c_node[t, i]
+            disc = traces.f_err[t, i]
+            if proc <= best_off and proc <= disc:
+                s[t, i, i] = 1.0
+            elif best_off <= disc:
+                s[t, i, best_j] = 1.0
+            else:
+                r[t, i] = 1.0
+    return MovementPlan(s=s, r=r)
+
+
+def greedy_linear_loop(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
+    """Original per-round Python loop — kept as the oracle for the
+    vectorized path and the baseline in the engine_throughput bench."""
     T, n = traces.c_node.shape
     adj3 = _adj_t(adj, T)
     s = np.zeros((T, n, n))
@@ -106,21 +217,96 @@ def repair_capacities(plan: MovementPlan, traces: CostTraces,
                       adj: np.ndarray, D: np.ndarray) -> MovementPlan:
     """Local repair of capacity violations (Theorem 6 guidance).
 
-    Forward pass over t: (1) clip each link transfer to C_ij; (2) clip the
-    receiving node's incoming volume to its residual capacity at t+1;
-    spilled fractions revert at the SOURCE to its next-best option
-    (process locally if c_i ≤ f_i and capacity remains, else discard).
+    Forward pass over t (sequential — arrivals chain rounds together).
+    Violation *detection* is vectorized: (1) all link-capacity clips for
+    a round come from one masked array comparison; (2) receiver
+    overloads at t+1 come from one volume-matrix reduction. The spill
+    *events* themselves — cutting an overloaded receiver's senders in
+    index order and reverting each spill at the SOURCE to its next-best
+    option (process locally if c_i ≤ f_i and node capacity remains,
+    else discard) — replay the original per-event scalar scan, so the
+    result matches ``repair_capacities_loop`` bit for bit. Theorem 6's
+    regime has few violations, so the per-event part stays off the hot
+    path.
     """
+    T, n = plan.r.shape
+    adj3 = _adj_t(adj, T)
+    s = plan.s.copy()
+    r = plan.r.copy()
+    dg = np.arange(n)
+    eye = np.eye(n, dtype=bool)
+    for t in range(T):
+        Dt = D[t]
+        Dt_safe = np.maximum(Dt, 1e-12)
+        # local processing this round from s_ii(t) plus arrivals from t-1
+        if t > 0:
+            vol_prev = s[t - 1] * D[t - 1][:, None]
+            arrivals = vol_prev.sum(0) - vol_prev[dg, dg]
+        else:
+            arrivals = np.zeros(n)
+        # (1) link capacity
+        viol = (adj3[t] & ~eye) & (s[t] * Dt[:, None] > traces.cap_link[t])
+        if viol.any():
+            spill_ij = np.where(
+                viol, s[t] - traces.cap_link[t] / Dt_safe[:, None], 0.0)
+            s[t] -= spill_ij
+            for i, j in zip(*np.nonzero(spill_ij > 0)):   # source-major
+                _revert(s, r, t, i, spill_ij[i, j], traces, Dt, arrivals)
+        # (2) node capacity of receivers at t+1 (arrivals processed then)
+        # violation detection is vectorized; the cut sequence per
+        # overloaded receiver replicates the original sender scan so the
+        # arithmetic (and therefore every knife-edge capacity
+        # comparison in _revert) matches the loop oracle bit for bit
+        if t + 1 < T:
+            vol = s[t] * Dt[:, None]
+            inc = vol.sum(0) - vol[dg, dg]
+            over = inc + s[t + 1][dg, dg] * D[t + 1] \
+                - traces.cap_node[t + 1]
+            for j in np.nonzero(over > 1e-9)[0]:
+                excess = over[j]
+                for i in np.nonzero(vol[:, j] > 0)[0]:
+                    if i == j:
+                        continue
+                    if excess <= 1e-12:
+                        break
+                    cut = min(vol[i, j], excess)
+                    spill = cut / max(Dt[i], 1e-12)
+                    s[t, i, j] -= spill
+                    excess -= cut
+                    _revert(s, r, t, i, spill, traces, Dt, arrivals)
+        # (3) own node capacity at t for s_ii
+        over = s[t][dg, dg] * Dt + arrivals - traces.cap_node[t]
+        mask = over > 1e-9
+        if mask.any():
+            cut = np.minimum(s[t][dg, dg] * Dt, np.maximum(over, 0.0))
+            spill = np.where(mask, cut / Dt_safe, 0.0)
+            s[t][dg, dg] -= spill
+            r[t] += spill
+    return MovementPlan(s=s, r=r)
+
+
+def _revert(s, r, t, i, spill, traces, Dt, arrivals):
+    """Send a spilled fraction back to i's next-best option."""
+    cap_left = traces.cap_node[t, i] - (s[t, i, i] * Dt[i] + arrivals[i])
+    if (traces.c_node[t, i] <= traces.f_err[t, i]
+            and cap_left >= spill * Dt[i]):
+        s[t, i, i] += spill
+    else:
+        r[t, i] += spill
+
+
+def repair_capacities_loop(plan: MovementPlan, traces: CostTraces,
+                           adj: np.ndarray, D: np.ndarray) -> MovementPlan:
+    """Original per-(i, j) Python-loop repair — oracle for the
+    vectorized path."""
     T, n = plan.r.shape
     adj3 = _adj_t(adj, T)
     s = plan.s.copy()
     r = plan.r.copy()
     for t in range(T):
         Dt = D[t]
-        # local processing this round from s_ii(t) plus arrivals from t-1
         arrivals = (s[t - 1] * D[t - 1][:, None]).sum(0) - \
             np.diag(s[t - 1]) * D[t - 1] if t > 0 else np.zeros(n)
-        # (1) link capacity
         for i in range(n):
             for j in np.nonzero(adj3[t][i])[0]:
                 if i == j or s[t, i, j] == 0:
@@ -130,7 +316,6 @@ def repair_capacities(plan: MovementPlan, traces: CostTraces,
                     spill = s[t, i, j] - cap / max(Dt[i], 1e-12)
                     s[t, i, j] -= spill
                     _revert(s, r, t, i, spill, traces, Dt, arrivals)
-        # (2) node capacity of receivers at t+1 (arrivals processed then)
         if t + 1 < T:
             inc = (s[t] * Dt[:, None]).sum(0) - np.diag(s[t]) * Dt
             local_next = np.diag(s[t + 1]) * D[t + 1]
@@ -148,7 +333,6 @@ def repair_capacities(plan: MovementPlan, traces: CostTraces,
                     s[t, i, j] -= spill
                     excess -= cut
                     _revert(s, r, t, i, spill, traces, Dt, arrivals)
-        # (3) own node capacity at t for s_ii
         G_now = np.diag(s[t]) * Dt + arrivals
         over = G_now - traces.cap_node[t]
         for i in np.nonzero(over > 1e-9)[0]:
@@ -159,30 +343,13 @@ def repair_capacities(plan: MovementPlan, traces: CostTraces,
     return MovementPlan(s=s, r=r)
 
 
-def _revert(s, r, t, i, spill, traces, Dt, arrivals):
-    """Send a spilled fraction back to i's next-best option."""
-    cap_left = traces.cap_node[t, i] - (s[t, i, i] * Dt[i] + arrivals[i])
-    if (traces.c_node[t, i] <= traces.f_err[t, i]
-            and cap_left >= spill * Dt[i]):
-        s[t, i, i] += spill
-    else:
-        r[t, i] += spill
-
-
 # ---------------------------------------------------------------------------
 # General convex solver (1/sqrt error cost, Lemma 1)
 # ---------------------------------------------------------------------------
 
 
-def solve_convex(traces: CostTraces, adj: np.ndarray, D: np.ndarray, *,
-                 error_model: str = "sqrt", gamma: float = 1.0,
-                 iters: int = 800, lr: float = 0.05,
-                 capacity_penalty: float = 50.0,
-                 seed: int = 0) -> MovementPlan:
-    """Masked-softmax parametrization of [s | r] + Adam (pure JAX).
-
-    error_model: "sqrt" (f·γ/√G), "neg_G" (−f·G), "discard" (f·D·r).
-    """
+def _convex_mask(traces: CostTraces, adj: np.ndarray) -> np.ndarray:
+    """Support mask over the [s_ij | r_i] softmax parametrization."""
     T, n = traces.c_node.shape
     adj3 = _adj_t(adj, T)
     mask = np.concatenate(
@@ -190,13 +357,14 @@ def solve_convex(traces: CostTraces, adj: np.ndarray, D: np.ndarray, *,
         axis=2).copy()                                     # [s_ij | r_i]
     # no off-horizon offloading in the final round
     mask[T - 1, :, :n] &= np.eye(n, dtype=bool)
-    mask_j = jnp.asarray(mask)
-    c_node = jnp.asarray(traces.c_node)
-    c_link = jnp.asarray(traces.c_link)
-    f_err = jnp.asarray(traces.f_err)
-    cap_node = jnp.asarray(np.minimum(traces.cap_node, 1e12))
-    cap_link = jnp.asarray(np.minimum(traces.cap_link, 1e12))
-    Dj = jnp.asarray(D, jnp.float32)
+    return mask
+
+
+def _convex_core(c_node, c_link, f_err, cap_node, cap_link, mask_j, Dj, z0,
+                 *, error_model, gamma, iters, lr, capacity_penalty):
+    """One scenario's Adam descent, pure jnp — vmap-able over a leading
+    scenario axis for batched sweeps."""
+    n = c_node.shape[1]
 
     def unpack(z):
         z = jnp.where(mask_j, z, -jnp.inf)
@@ -227,12 +395,8 @@ def solve_convex(traces: CostTraces, adj: np.ndarray, D: np.ndarray, *,
                + jnp.sum(jax.nn.relu(off * Dj[:, :, None] - cap_link) ** 2))
         return proc + trans + err + capacity_penalty * pen
 
-    z = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (T, n, n + 1))
-    m = jnp.zeros_like(z)
-    v = jnp.zeros_like(z)
-    grad_fn = jax.jit(jax.grad(objective))
+    grad_fn = jax.grad(objective)
 
-    @jax.jit
     def step(carry, i):
         z, m, v = carry
         g = grad_fn(z)
@@ -244,9 +408,79 @@ def solve_convex(traces: CostTraces, adj: np.ndarray, D: np.ndarray, *,
         z = z - lr * mh / (jnp.sqrt(vh) + 1e-8)
         return (z, m, v), None
 
-    (z, _, _), _ = jax.lax.scan(step, (z, m, v), jnp.arange(iters))
-    s, r = unpack(z)
+    (z, _, _), _ = jax.lax.scan(
+        step, (z0, jnp.zeros_like(z0), jnp.zeros_like(z0)),
+        jnp.arange(iters))
+    return unpack(z)
+
+
+@partial(jax.jit, static_argnames=("error_model", "gamma", "iters", "lr",
+                                   "capacity_penalty", "batched"))
+def _convex_run(c_node, c_link, f_err, cap_node, cap_link, mask, D, z0, *,
+                error_model, gamma, iters, lr, capacity_penalty, batched):
+    core = partial(_convex_core, error_model=error_model, gamma=gamma,
+                   iters=iters, lr=lr, capacity_penalty=capacity_penalty)
+    if batched:
+        core = jax.vmap(core)
+    return core(c_node, c_link, f_err, cap_node, cap_link, mask, D, z0)
+
+
+def _convex_inputs(traces: CostTraces, adj: np.ndarray, D: np.ndarray):
+    return (jnp.asarray(traces.c_node), jnp.asarray(traces.c_link),
+            jnp.asarray(traces.f_err),
+            jnp.asarray(np.minimum(traces.cap_node, 1e12)),
+            jnp.asarray(np.minimum(traces.cap_link, 1e12)),
+            jnp.asarray(_convex_mask(traces, adj)),
+            jnp.asarray(D, jnp.float32))
+
+
+def solve_convex(traces: CostTraces, adj: np.ndarray, D: np.ndarray, *,
+                 error_model: str = "sqrt", gamma: float = 1.0,
+                 iters: int = 800, lr: float = 0.05,
+                 capacity_penalty: float = 50.0,
+                 seed: int = 0) -> MovementPlan:
+    """Masked-softmax parametrization of [s | r] + Adam (pure JAX).
+
+    error_model: "sqrt" (f·γ/√G), "neg_G" (−f·G), "discard" (f·D·r).
+    """
+    T, n = traces.c_node.shape
+    z0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (T, n, n + 1))
+    s, r = _convex_run(*_convex_inputs(traces, adj, D), z0,
+                       error_model=error_model, gamma=gamma, iters=iters,
+                       lr=lr, capacity_penalty=capacity_penalty,
+                       batched=False)
     return MovementPlan(s=np.asarray(s, float), r=np.asarray(r, float))
+
+
+def solve_convex_batched(traces_seq, adj_seq, D_seq, *,
+                         error_model: str = "sqrt", gamma: float = 1.0,
+                         iters: int = 800, lr: float = 0.05,
+                         capacity_penalty: float = 50.0,
+                         seeds=0) -> list[MovementPlan]:
+    """Solve many (traces, adj, D) scenarios in ONE vmapped program.
+
+    All scenarios must share (T, n). ``seeds`` is an int — the SAME z0
+    init for every scenario, matching what sequential
+    ``solve_convex(..., seed=seeds)`` calls would use — or a sequence
+    of per-scenario seeds for decorrelated restarts. Scenario b
+    reproduces ``solve_convex(traces_seq[b], ..., seed=seeds[b])`` up
+    to vmap-reduction reassociation.
+    """
+    B = len(traces_seq)
+    T, n = traces_seq[0].c_node.shape
+    if np.ndim(seeds) == 0:
+        seeds = [int(seeds)] * B
+    stacked = [jnp.stack(a) for a in zip(*(
+        _convex_inputs(tr, adj, D)
+        for tr, adj, D in zip(traces_seq, adj_seq, D_seq)))]
+    z0 = jnp.stack([0.01 * jax.random.normal(jax.random.PRNGKey(sd),
+                                             (T, n, n + 1))
+                    for sd in seeds])
+    s, r = _convex_run(*stacked, z0, error_model=error_model, gamma=gamma,
+                       iters=iters, lr=lr, capacity_penalty=capacity_penalty,
+                       batched=True)
+    return [MovementPlan(s=np.asarray(s[b], float),
+                         r=np.asarray(r[b], float)) for b in range(B)]
 
 
 # ---------------------------------------------------------------------------

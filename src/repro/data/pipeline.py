@@ -10,6 +10,7 @@
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -67,29 +68,33 @@ def apply_movement(streams: FogStreams, plan: MovementPlan,
     """
     rng = rng or np.random.default_rng(1)
     n, T = streams.n, streams.T
-    processed = [[np.empty(0, np.int64) for _ in range(n)] for _ in range(T)]
+    # per-destination part lists; one concatenate per (t, i) at the end
+    # instead of the old per-(i, j) quadratic re-concatenation
+    buckets: list[list[list[np.ndarray]]] = \
+        [[[] for _ in range(n)] for _ in range(T)]
     for t in range(T):
+        s_t, r_t = plan.s[t], plan.r[t]
         for i in range(n):
             idx = streams.collected[t][i]
             if len(idx) == 0:
                 continue
             idx = rng.permutation(idx)
-            fracs = np.concatenate([plan.s[t, i], [plan.r[t, i]]])
+            fracs = np.concatenate([s_t[i], [r_t[i]]])
             fracs = np.clip(fracs, 0, None)
             fracs = fracs / max(fracs.sum(), 1e-12)
             cuts = np.floor(np.cumsum(fracs) * len(idx) + 1e-9).astype(int)
-            start = 0
-            for j, end in enumerate(cuts[:-1]):  # last bucket = discard
-                part = idx[start:end]
-                start = end
-                if len(part) == 0:
-                    continue
+            ends = cuts[:-1]                     # last bucket = discard
+            starts = np.empty_like(ends)
+            starts[0] = 0
+            starts[1:] = ends[:-1]
+            for j in np.nonzero(ends > starts)[0]:
+                part = idx[starts[j]:ends[j]]
                 if j == i:
-                    processed[t][i] = np.concatenate([processed[t][i], part])
+                    buckets[t][i].append(part)
                 elif t + 1 < T:
-                    processed[t + 1][j] = np.concatenate(
-                        [processed[t + 1][j], part])
-    return processed
+                    buckets[t + 1][j].append(part)
+    return [[np.concatenate(cell) if cell else np.empty(0, np.int64)
+             for cell in row] for row in buckets]
 
 
 def label_similarity(label_multisets: list[np.ndarray],
@@ -108,6 +113,23 @@ def label_similarity(label_multisets: list[np.ndarray],
     return float(np.mean(sims)) if sims else 0.0
 
 
+def pad_size(processed: list[list[np.ndarray]],
+             requested: int = 0) -> int:
+    """P for padded batches: the post-movement per-device maximum.
+
+    Offloading concentrates data, so sizing P from the *collected*
+    streams (or a too-small user override) silently drops samples at the
+    receiving devices. A ``requested`` pad size only ever grows P."""
+    post_max = max((len(ix) for row in processed for ix in row),
+                   default=1) or 1
+    if requested and requested < post_max:
+        warnings.warn(
+            f"max_points={requested} is below the post-movement maximum "
+            f"of {post_max} samples/device/round; padding to {post_max} "
+            "to avoid dropping samples", stacklevel=2)
+    return max(requested, post_max)
+
+
 def pad_batches(processed_t: list[np.ndarray], x: np.ndarray,
                 y: np.ndarray, max_points: int):
     """Stack per-device variable-size batches into padded arrays.
@@ -119,9 +141,43 @@ def pad_batches(processed_t: list[np.ndarray], x: np.ndarray,
     yb = np.zeros((n, P), np.int32)
     w = np.zeros((n, P), np.float32)
     for i, idx in enumerate(processed_t):
+        if len(idx) > P:
+            warnings.warn(
+                f"pad_batches: device {i} holds {len(idx)} samples but "
+                f"P={P}; truncating (size P via pipeline.pad_size to "
+                "avoid this)", stacklevel=2)
         k = min(len(idx), P)
         if k:
             xb[i, :k] = x[idx[:k]]
             yb[i, :k] = y[idx[:k]]
             w[i, :k] = 1.0
     return xb, yb, w
+
+
+def stage_rounds(processed: list[list[np.ndarray]], y: np.ndarray,
+                 max_points: int):
+    """Stage the whole horizon for the scan engine.
+
+    Returns (idx (T, n, P) int32 — global sample ids, 0-padded;
+    yb (T, n, P) int32; w (T, n, P) float32 weight mask;
+    counts (T, n) float32). Pixels are gathered on device from these
+    indices by ``core.engine``."""
+    T, n, P = len(processed), len(processed[0]), max_points
+    idx = np.zeros((T, n, P), np.int32)
+    yb = np.zeros((T, n, P), np.int32)
+    w = np.zeros((T, n, P), np.float32)
+    counts = np.zeros((T, n), np.float32)
+    for t, row in enumerate(processed):
+        for i, ix in enumerate(row):
+            k = len(ix)
+            if k > P:
+                warnings.warn(
+                    f"stage_rounds: device {i} round {t} holds {k} "
+                    f"samples but P={P}; truncating", stacklevel=2)
+                k = P
+            if k:
+                idx[t, i, :k] = ix[:k]
+                yb[t, i, :k] = y[ix[:k]]
+                w[t, i, :k] = 1.0
+            counts[t, i] = k
+    return idx, yb, w, counts

@@ -27,6 +27,15 @@ from jax.sharding import PartitionSpec as P
 from repro.models import transformer as T
 from repro.optim import optimizers as opt_lib
 
+# jax < 0.5 ships shard_map under experimental with check_rep instead of
+# check_vma; keep both spellings working
+if hasattr(jax, "shard_map"):
+    _shard_map = partial(jax.shard_map, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    _shard_map = partial(_shard_map_exp, check_rep=False)
+
 
 def make_fedavg_round(cfg, optimizer: opt_lib.Optimizer, tau: int,
                       mesh, data_axis: str = "data"):
@@ -70,8 +79,7 @@ def make_fedavg_round(cfg, optimizer: opt_lib.Optimizer, tau: int,
         return params, opt_state, losses.mean()
 
     batch_spec = P(None, data_axis)  # (tau, batch, ...)
-    return jax.jit(jax.shard_map(
+    return jax.jit(_shard_map(
         local_round, mesh=mesh,
         in_specs=(P(), P(), batch_spec),
-        out_specs=(P(), P(), P()),
-        check_vma=False))
+        out_specs=(P(), P(), P())))

@@ -19,6 +19,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 INF = 3.4e38  # python float: jnp scalars would be captured as consts
 
+# jax < 0.5 names this TPUCompilerParams; keep both spellings working
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 
 def _kernel(clink_ref, cnext_ref, cnode_ref, ferr_ref, adj_ref,
             choice_ref, bestj_ref, bestc_ref, min_sc, arg_sc, *,
@@ -95,8 +99,21 @@ def offload_greedy(c_link, c_next, c_node, f_err, adj, *, bn: int = 128,
         ],
         scratch_shapes=[pltpu.VMEM((bn,), jnp.float32),
                         pltpu.VMEM((bn,), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(c_link, c_next[None, :], c_node[None, :], f_err[None, :], adj)
     return choice[0], bestj[0], bestc[0]
+
+
+def offload_greedy_batched(c_link, c_next, c_node, f_err, adj, *,
+                           bn: int = 128, interpret: bool | None = None):
+    """All-rounds Theorem 3 rule: leading time axis T on every operand.
+
+    c_link (T,n,n); c_next, c_node, f_err (T,n); adj (T,n,n) bool.
+    vmap lifts the round axis onto the Pallas grid, so the whole horizon
+    is one kernel launch. Returns (choice (T,n), best_j (T,n),
+    best_cost (T,n)).
+    """
+    kern = functools.partial(offload_greedy, bn=bn, interpret=interpret)
+    return jax.vmap(kern)(c_link, c_next, c_node, f_err, adj)

@@ -13,7 +13,7 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.offload_greedy import offload_greedy
+from repro.kernels.offload_greedy import offload_greedy, offload_greedy_batched
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -36,3 +36,14 @@ def greedy_decision(c_link, c_next, c_node, f_err, adj, *, use_pallas=True):
     if use_pallas:
         return offload_greedy(c_link, c_next, c_node, f_err, adj)
     return ref.offload_greedy_ref(c_link, c_next, c_node, f_err, adj)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def greedy_decision_batched(c_link, c_next, c_node, f_err, adj, *,
+                            use_pallas=True):
+    """All T rounds of the Theorem-3 rule in one program: every operand
+    carries a leading time axis (c_link (T,n,n); c_next, c_node, f_err
+    (T,n); adj (T,n,n))."""
+    if use_pallas:
+        return offload_greedy_batched(c_link, c_next, c_node, f_err, adj)
+    return jax.vmap(ref.offload_greedy_ref)(c_link, c_next, c_node, f_err, adj)

@@ -1,0 +1,129 @@
+"""Scan-compiled engine vs legacy per-round loop: same accuracy curve,
+H-weighting and losses (same seed, same plan), including churn; plus the
+pad-size regression (post-movement P, no silent sample drop)."""
+import numpy as np
+import pytest
+
+from repro.core import engine as eng
+from repro.core import federated as F
+from repro.core import movement as mv
+from repro.core.costs import synthetic_costs
+from repro.core.topology import fully_connected
+from repro.data import pipeline as pl
+from repro.data.synthetic import make_image_dataset
+
+
+def _setup(n=6, T=12, tau=4, p_exit=0.0, p_entry=0.0, seed=0,
+           max_points=0):
+    data = make_image_dataset(n_train=1200, n_test=400, seed=0)
+    cfg = F.FedConfig(n=n, T=T, tau=tau, eta=0.05, model="mlp", seed=seed,
+                      p_exit=p_exit, p_entry=p_entry, max_points=max_points)
+    rng = np.random.default_rng(seed)
+    traces = synthetic_costs(n, T, rng)
+    adj = fully_connected(n)
+    streams = pl.poisson_streams(n, T, data[1], rng=rng)
+    plan = mv.greedy_linear(traces, adj)
+    activity = F.churn_activity(cfg, rng) if (p_exit or p_entry) else None
+    return cfg, data, traces, adj, plan, streams, activity
+
+
+def _run(engine, **kw):
+    cfg, data, traces, adj, plan, streams, activity = _setup(**kw)
+    return F.run_network_aware(cfg, data, traces, adj, plan,
+                               streams=streams, activity=activity,
+                               engine=engine)
+
+
+def _assert_equivalent(h_legacy, h_scan):
+    assert h_legacy["agg_round"] == h_scan["agg_round"]
+    assert len(h_scan["test_acc"]) == len(h_legacy["test_acc"])
+    np.testing.assert_allclose(h_scan["test_acc"], h_legacy["test_acc"],
+                               atol=1e-2)
+    np.testing.assert_allclose(h_scan["test_loss"], h_legacy["test_loss"],
+                               rtol=2e-3, atol=1e-4)
+    np.testing.assert_allclose(np.stack(h_scan["device_loss"]),
+                               np.stack(h_legacy["device_loss"]),
+                               rtol=2e-3, atol=1e-4)
+    # H-weighting: integer counts, exact in both accumulations
+    np.testing.assert_allclose(np.stack(h_scan["H_agg"]),
+                               np.stack(h_legacy["H_agg"]), atol=1e-4)
+
+
+def test_scan_matches_legacy():
+    _assert_equivalent(_run("legacy"), _run("scan"))
+
+
+def test_scan_matches_legacy_churn():
+    kw = dict(p_exit=0.2, p_entry=0.15, seed=3)
+    h_legacy, h_scan = _run("legacy", **kw), _run("scan", **kw)
+    # churn must actually exercise the masking for this to test anything
+    assert not all(a.all() for a in h_legacy["active"])
+    _assert_equivalent(h_legacy, h_scan)
+
+
+def test_scan_matches_legacy_offset_tau():
+    # T not a multiple of tau: trailing rounds after the last aggregation
+    _assert_equivalent(_run("legacy", T=10, tau=3),
+                       _run("scan", T=10, tau=3))
+
+
+def test_history_contract_keys():
+    h = _run("scan")
+    for key in ("round", "device_loss", "test_acc", "test_loss",
+                "agg_round", "active", "processed_counts", "sim_before",
+                "sim_after", "H_agg"):
+        assert key in h, key
+    assert len(h["round"]) == len(h["device_loss"]) == 12
+
+
+# ---------------------------------------------------------------------------
+# pad-size regression: offloading concentrates data; P must come from the
+# post-movement maximum, and a too-small user override must warn, not drop
+# ---------------------------------------------------------------------------
+
+
+def test_pad_batches_warns_on_truncation():
+    x = np.zeros((10, 2, 2), np.float32)
+    y = np.arange(10, dtype=np.int32)
+    with pytest.warns(UserWarning, match="truncating"):
+        pl.pad_batches([np.arange(6)], x, y, max_points=4)
+
+
+def test_pad_size_grows_to_post_movement_max():
+    processed = [[np.arange(3), np.arange(9)], [np.arange(1), np.arange(2)]]
+    with pytest.warns(UserWarning, match="post-movement maximum"):
+        P = pl.pad_size(processed, requested=4)
+    assert P == 9
+    assert pl.pad_size(processed) == 9
+    assert pl.pad_size(processed, requested=20) == 20
+
+
+def test_run_does_not_drop_concentrated_samples():
+    """A max_points override below the post-movement max used to silently
+    drop samples at offload-receiving devices; now P grows (with a
+    warning) and every processed sample trains."""
+    with pytest.warns(UserWarning, match="post-movement maximum"):
+        h = _run("scan", max_points=1)
+    # H aggregates len(processed[t][i]) for active devices; with act all
+    # ones the per-window sums must match the processed counts exactly
+    counts = np.asarray(h["processed_counts"], float)
+    H_sum = np.stack(h["H_agg"]).sum(0)
+    np.testing.assert_allclose(H_sum, counts.sum(0))
+
+
+def test_stage_rounds_consistent_with_pad_batches():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((50, 2, 2)).astype(np.float32)
+    y = rng.integers(0, 10, 50).astype(np.int32)
+    processed = [[rng.choice(50, 4, replace=False), np.empty(0, np.int64)],
+                 [rng.choice(50, 2, replace=False),
+                  rng.choice(50, 5, replace=False)]]
+    P = pl.pad_size(processed)
+    idx, yb, w, counts = pl.stage_rounds(processed, y, P)
+    assert idx.shape == (2, 2, 5) and counts.tolist() == [[4, 0], [2, 5]]
+    for t in range(2):
+        xb_t, yb_t, w_t = pl.pad_batches(processed[t], x, y, P)
+        np.testing.assert_array_equal(yb[t], yb_t)
+        np.testing.assert_array_equal(w[t], w_t)
+        np.testing.assert_array_equal(x[idx[t]] * w[t][..., None, None],
+                                      xb_t * w_t[..., None, None])

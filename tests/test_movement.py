@@ -2,7 +2,9 @@
 Theorems 3, 4, 6)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import movement as mv
 from repro.core.costs import CostTraces, synthetic_costs, with_capacity

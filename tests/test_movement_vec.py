@@ -1,0 +1,171 @@
+"""Vectorized movement plane vs the original Python loops (no hypothesis
+dependency — these must run on the quick tier): batched-min-plus greedy,
+vectorized capacity repair, split-based apply_movement, and the
+vmap-batched convex solver."""
+import numpy as np
+import pytest
+
+from repro.core import movement as mv
+from repro.core.costs import synthetic_costs, with_capacity
+from repro.core.topology import fully_connected, make_topology
+from repro.data import pipeline as pl
+
+
+@pytest.mark.parametrize("T,n,rho,seed", [
+    (1, 4, 1.0, 0), (2, 8, 0.5, 1), (9, 16, 0.3, 2), (30, 64, 0.7, 3),
+])
+def test_greedy_vectorized_identical_to_loop(T, n, rho, seed):
+    rng = np.random.default_rng(seed)
+    tr = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=rho)
+    p_loop = mv.greedy_linear_loop(tr, adj)
+    p_vec = mv.greedy_linear(tr, adj)
+    p_scalar = mv.greedy_linear_scalar(tr, adj)
+    np.testing.assert_array_equal(p_loop.s, p_vec.s)
+    np.testing.assert_array_equal(p_loop.r, p_vec.r)
+    np.testing.assert_array_equal(p_loop.s, p_scalar.s)
+    np.testing.assert_array_equal(p_loop.r, p_scalar.r)
+
+
+def test_greedy_time_varying_adjacency():
+    rng = np.random.default_rng(5)
+    T, n = 6, 10
+    tr = synthetic_costs(n, T, rng)
+    adj3 = rng.random((T, n, n)) < 0.5
+    p_loop = mv.greedy_linear_loop(tr, adj3)
+    p_vec = mv.greedy_linear(tr, adj3)
+    np.testing.assert_array_equal(p_loop.s, p_vec.s)
+    np.testing.assert_array_equal(p_loop.r, p_vec.r)
+
+
+def test_greedy_device_backend_matches_loop():
+    rng = np.random.default_rng(4)
+    T, n = 6, 128
+    tr = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=0.4)
+    p_loop = mv.greedy_linear_loop(tr, adj)
+    p_jnp = mv.greedy_linear(tr, adj, backend="jnp")
+    np.testing.assert_array_equal(p_loop.s, p_jnp.s)
+    np.testing.assert_array_equal(p_loop.r, p_jnp.r)
+
+
+def test_greedy_pallas_backend_matches_loop():
+    rng = np.random.default_rng(6)
+    T, n = 4, 128
+    tr = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=0.5)
+    p_loop = mv.greedy_linear_loop(tr, adj)
+    p_pal = mv.greedy_linear(tr, adj, backend="pallas")
+    np.testing.assert_array_equal(p_loop.s, p_pal.s)
+    np.testing.assert_array_equal(p_loop.r, p_pal.r)
+
+
+def test_repair_vectorized_satisfies_capacities():
+    rng = np.random.default_rng(9)
+    T, n = 12, 40
+    tr = with_capacity(synthetic_costs(n, T, rng), cap_node=30.0,
+                       cap_link=10.0)
+    adj = make_topology("random", n, rng, rho=0.5)
+    D = rng.poisson(25, (T, n)).astype(float)
+    plan = mv.repair_capacities(mv.greedy_linear(tr, adj), tr, adj, D)
+    plan.check(adj)
+    G = plan.processed(D)
+    assert np.all(G <= tr.cap_node + 1e-6), G.max()
+    link_vol = plan.s * (1 - np.eye(n))[None] * D[:, :, None]
+    assert np.all(link_vol <= tr.cap_link + 1e-6)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_repair_matches_loop_on_fractional_plans(seed):
+    """The vectorized repair must reproduce the per-(i, j) loop exactly,
+    including for fractional (convex-solver) plans where a node spills
+    on several links and reverts event by event."""
+    rng = np.random.default_rng(seed)
+    T, n = 6, 8
+    tr = with_capacity(synthetic_costs(n, T, rng, f_err=2.0),
+                       cap_node=12.0, cap_link=4.0)
+    adj = make_topology("random", n, rng, rho=0.6)
+    D = rng.poisson(15, (T, n)).astype(float)
+    # dense fractional plan: random softmax rows on the support
+    mask = np.concatenate([(adj | np.eye(n, dtype=bool))[None].repeat(T, 0),
+                           np.ones((T, n, 1), bool)], axis=2)
+    z = np.where(mask, rng.standard_normal((T, n, n + 1)), -np.inf)
+    p = np.exp(z - z.max(2, keepdims=True))
+    p /= p.sum(2, keepdims=True)
+    plan = mv.MovementPlan(s=p[:, :, :n].copy(), r=p[:, :, n].copy())
+    got = mv.repair_capacities(plan, tr, adj, D)
+    want = mv.repair_capacities_loop(plan, tr, adj, D)
+    np.testing.assert_array_equal(got.s, want.s)
+    np.testing.assert_array_equal(got.r, want.r)
+
+
+def test_repair_matches_loop_on_greedy_plans():
+    rng = np.random.default_rng(7)
+    T, n = 10, 12
+    tr = with_capacity(synthetic_costs(n, T, rng), cap_node=20.0,
+                       cap_link=8.0)
+    adj = make_topology("random", n, rng, rho=0.5)
+    D = rng.poisson(18, (T, n)).astype(float)
+    plan = mv.greedy_linear(tr, adj)
+    got = mv.repair_capacities(plan, tr, adj, D)
+    want = mv.repair_capacities_loop(plan, tr, adj, D)
+    np.testing.assert_array_equal(got.s, want.s)
+    np.testing.assert_array_equal(got.r, want.r)
+
+
+def test_repair_handles_empty_rounds():
+    rng = np.random.default_rng(2)
+    T, n = 5, 6
+    tr = with_capacity(synthetic_costs(n, T, rng), cap_node=8.0,
+                       cap_link=3.0)
+    adj = fully_connected(n)
+    D = rng.poisson(10, (T, n)).astype(float)
+    D[2] = 0.0                                   # a silent round
+    plan = mv.repair_capacities(mv.greedy_linear(tr, adj), tr, adj, D)
+    plan.check(adj)
+    assert np.all(plan.processed(D) <= tr.cap_node + 1e-6)
+
+
+def test_apply_movement_conserves_and_delays():
+    rng = np.random.default_rng(0)
+    n, T = 5, 6
+    y = rng.integers(0, 10, 2000)
+    streams = pl.poisson_streams(n, T, y, rng=rng, mean_per_round=15)
+    tr = synthetic_costs(n, T, rng)
+    plan = mv.greedy_linear(tr, fully_connected(n))
+    processed = pl.apply_movement(streams, plan, rng)
+    collected_all = np.sort(np.concatenate(
+        [ix for row in streams.collected for ix in row]))
+    processed_all = np.sort(np.concatenate(
+        [ix for row in processed for ix in row]))
+    # multiset inclusion: processed ⊆ collected, no duplication
+    assert len(processed_all) <= len(collected_all)
+    col_counts = np.bincount(collected_all, minlength=2000)
+    prc_counts = np.bincount(processed_all, minlength=2000)
+    assert np.all(prc_counts <= col_counts)
+    # full-offload delay: everything sent at t arrives at t+1
+    s = np.zeros((T, n, n))
+    s[:, 0, 1] = 1.0
+    s[:, 1:, :] = 0.0
+    s[:, np.arange(1, n), np.arange(1, n)] = 1.0
+    delayed = pl.apply_movement(streams, mv.MovementPlan(
+        s=s, r=np.zeros((T, n))), np.random.default_rng(0))
+    assert len(delayed[0][0]) == 0
+    for t in range(1, T):
+        assert len(delayed[t][1]) >= len(streams.collected[t - 1][0])
+
+
+def test_solve_convex_batched_matches_single():
+    T, n = 5, 6
+    traces = [synthetic_costs(n, T, np.random.default_rng(s), f_err=3.0)
+              for s in (1, 2, 3)]
+    adjs = [fully_connected(n)] * 3
+    Ds = [np.full((T, n), 30.0)] * 3
+    batched = mv.solve_convex_batched(traces, adjs, Ds, error_model="sqrt",
+                                      gamma=5.0, iters=150)
+    for tr, adj, D, got in zip(traces, adjs, Ds, batched):
+        want = mv.solve_convex(tr, adj, D, error_model="sqrt", gamma=5.0,
+                               iters=150)
+        got.check(adj)
+        np.testing.assert_allclose(got.s, want.s, atol=5e-3)
+        np.testing.assert_allclose(got.r, want.r, atol=5e-3)

@@ -9,7 +9,8 @@ import pytest
 from repro.checkpoint import checkpoint as ckpt
 from repro.core import estimator as est
 from repro.core.costs import (effective_link_costs, ici_costs,
-                              synthetic_costs, testbed_like_costs,
+                              synthetic_costs,
+                              testbed_like_costs as make_testbed_costs,
                               with_capacity)
 from repro.core.topology import ChurnProcess, make_topology
 from repro.optim import optimizers as opt_lib
@@ -102,7 +103,7 @@ def test_testbed_costs_correlated():
     """The paper's key observation: compute and link costs correlate on
     real hardware."""
     rng = np.random.default_rng(0)
-    tr = testbed_like_costs(30, 50, rng)
+    tr = make_testbed_costs(30, 50, rng)
     c_dev = tr.c_node.mean(0)
     c_out = tr.c_link.mean(axis=(0, 2))
     corr = np.corrcoef(c_dev, c_out)[0, 1]

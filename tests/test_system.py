@@ -7,7 +7,8 @@ import pytest
 
 from repro.core import federated as F
 from repro.core import movement as mv
-from repro.core.costs import testbed_like_costs, with_capacity
+from repro.core.costs import testbed_like_costs as make_testbed_costs
+from repro.core.costs import with_capacity
 from repro.core.topology import make_topology
 from repro.data import pipeline as pl
 
@@ -16,7 +17,7 @@ from repro.data import pipeline as pl
 def fog_setup(small_images):
     rng = np.random.default_rng(0)
     cfg = F.FedConfig(n=8, T=30, tau=5, eta=0.1, model="mlp", seed=0)
-    traces = testbed_like_costs(cfg.n, cfg.T, rng, f_err=0.7)
+    traces = make_testbed_costs(cfg.n, cfg.T, rng, f_err=0.7)
     adj = make_topology("full", cfg.n, rng)
     return cfg, traces, adj, small_images
 
@@ -54,7 +55,7 @@ def test_offloading_increases_similarity_noniid(small_images):
     rng = np.random.default_rng(2)
     cfg = F.FedConfig(n=8, T=20, tau=5, eta=0.1, model="mlp", iid=False,
                       seed=2)
-    traces = testbed_like_costs(cfg.n, cfg.T, rng, f_err=0.7)
+    traces = make_testbed_costs(cfg.n, cfg.T, rng, f_err=0.7)
     adj = make_topology("full", cfg.n, rng)
     plan = mv.greedy_linear(traces, adj)
     hist = F.run_network_aware(cfg, small_images, traces, adj, plan)
@@ -83,7 +84,7 @@ def test_churn_reduces_active_and_processed(small_images):
     rng = np.random.default_rng(4)
     cfg = F.FedConfig(n=10, T=20, tau=5, eta=0.1, model="mlp",
                       p_exit=0.1, p_entry=0.02, seed=4)
-    traces = testbed_like_costs(cfg.n, cfg.T, rng)
+    traces = make_testbed_costs(cfg.n, cfg.T, rng)
     adj = make_topology("full", cfg.n, rng)
     act = F.churn_activity(cfg, rng)
     plan = mv.no_movement_plan(cfg.T, cfg.n)
