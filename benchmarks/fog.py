@@ -95,6 +95,151 @@ def convex_sweep_costs(n, T, *, f_errs=(0.3, 0.7), media=("wifi", "lte"),
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Scenario sweep layer: batched plan solving + engine-dispatched training
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One sweep point: costs, topology, data streams and plan recipe.
+
+    The point of the layer is BATCHING: ``solve_scenario_plans`` groups
+    scenarios by (T, n, error_model, γ) and solves each convex group in
+    ONE vmapped compiled program (``solve_convex_batched``), and
+    ``run_scenarios`` trains every point through the engine dispatch —
+    the device-sharded scan engine (eval streamed off the hot path)
+    when more than one device is visible.
+    """
+
+    key: dict
+    cfg: "F.FedConfig"
+    traces: object
+    adj: np.ndarray
+    D: np.ndarray
+    streams: "pl.FogStreams"
+    setting: str = "B"
+    error_model: str = "sqrt"
+    gamma: float = 1.0
+    activity: np.ndarray | None = None
+
+
+def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
+                  iid=True, costs="testbed", topology="full", rho=1.0,
+                  setting="B", error_model="sqrt", gamma=1.0,
+                  medium="wifi", p_exit=0.0, p_entry=0.0, f_err=0.7,
+                  seed=0) -> Scenario:
+    """Build one sweep point (same setup recipe as ``fog_experiment``)."""
+    rng = np.random.default_rng(seed)
+    data = dataset(scale.n_train, scale.n_test)
+    cfg = F.FedConfig(n=n, T=scale.T, tau=scale.tau, eta=scale.eta,
+                      model=model, iid=iid, seed=seed,
+                      p_exit=p_exit, p_entry=p_entry)
+    if costs == "testbed":
+        traces = testbed_like_costs(n, scale.T, rng, f_err=f_err,
+                                    medium=medium)
+    else:
+        traces = synthetic_costs(n, scale.T, rng, f_err=f_err)
+    adj = make_topology(topology, n, rng, rho=rho,
+                        costs=traces.c_node.mean(0))
+    streams = pl.poisson_streams(n, scale.T, data[1], iid=iid, rng=rng)
+    D = pl.counts(streams)
+    if setting in ("D", "E"):
+        traces = with_capacity(traces, float(D.mean()))
+    activity = (F.churn_activity(cfg, rng)
+                if (p_exit or p_entry) else None)
+    return Scenario(key=dict(key or {}), cfg=cfg, traces=traces, adj=adj,
+                    D=D, streams=streams, setting=setting,
+                    error_model=error_model, gamma=gamma,
+                    activity=activity)
+
+
+def _estimated(sc: Scenario):
+    """Imperfect-information settings plan on estimated traces/counts."""
+    if sc.setting in ("C", "E"):
+        return (est.estimate_traces(sc.traces, L=5),
+                est.estimate_counts(sc.D, L=5))
+    return sc.traces, sc.D
+
+
+def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
+                         seed=0) -> list[mv.MovementPlan]:
+    """Plans for a whole sweep, convex solves batched per group.
+
+    Scenarios sharing (T, n, error_model, γ) are stacked into ONE
+    ``solve_convex_batched`` call — one compiled program per group (a
+    sweep over a single network size is exactly one program). Greedy
+    (discard-cost) scenarios emit sparse plans per point; capacity
+    settings (D/E) get the streamed sparse repair afterwards.
+    """
+    plans: list = [None] * len(scenarios)
+    groups: dict[tuple, list[int]] = {}
+    for b, sc in enumerate(scenarios):
+        T_, n = sc.D.shape
+        if sc.setting == "A":
+            plans[b] = mv.no_movement_plan(T_, n)
+        elif sc.error_model == "discard":
+            tr, _ = _estimated(sc)
+            plans[b] = mv.greedy_linear(tr, sc.adj)
+        else:
+            groups.setdefault((T_, n, sc.error_model, sc.gamma),
+                              []).append(b)
+    for (_, _, em, gamma), idxs in groups.items():
+        estimated = [_estimated(scenarios[b]) for b in idxs]
+        trs = [tr for tr, _ in estimated]
+        Ds = [D for _, D in estimated]
+        adjs = [scenarios[b].adj for b in idxs]
+        for b, p in zip(idxs, mv.solve_convex_batched(
+                trs, adjs, Ds, error_model=em, gamma=gamma, iters=iters,
+                seeds=seed)):
+            plans[b] = p
+    for b, sc in enumerate(scenarios):
+        if sc.setting in ("D", "E"):
+            # setting E repairs on the ESTIMATED counts, like make_plan:
+            # the imperfect-information planner never sees true volumes
+            _, D_rep = _estimated(sc)
+            plans[b] = mv.repair_capacities(plans[b], sc.traces, sc.adj,
+                                            D_rep)
+    return plans
+
+
+def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
+                  train=True, engine="auto", iters=400, seed=0
+                  ) -> list[dict]:
+    """Solve + evaluate + (optionally) train a whole sweep.
+
+    Convex plans: one compiled program per (T, n) group. Training: the
+    engine dispatch of ``run_network_aware`` — "auto" resolves to
+    "sharded" on multi-device hosts (aggregation as cross-shard psum,
+    eval streamed off the hot path by the AsyncEvaluator), "scan"
+    otherwise.
+    """
+    from repro.core.engine import resolve_engine
+
+    plans = solve_scenario_plans(scenarios, iters=iters, seed=seed)
+    engine = resolve_engine(engine or "auto")
+    data = dataset(scale.n_train, scale.n_test)
+    rows = []
+    for sc, plan in zip(scenarios, plans):
+        cost = mv.plan_cost(plan, sc.traces, sc.D,
+                            error_model=sc.error_model, gamma=sc.gamma)
+        out = {**sc.key, "setting": sc.setting, "cost": cost,
+               "engine": engine}
+        if train:
+            hist = F.run_network_aware(sc.cfg, data, sc.traces, sc.adj,
+                                       plan, streams=sc.streams,
+                                       activity=sc.activity,
+                                       engine=engine)
+            out.update(acc=hist["test_acc"][-1],
+                       acc_curve=hist["test_acc"],
+                       sim_before=hist["sim_before"],
+                       sim_after=hist["sim_after"],
+                       avg_active=float(np.mean([a.sum()
+                                                 for a in hist["active"]])))
+        rows.append(out)
+    return rows
+
+
 def fog_experiment(*, scale: BenchScale, n=10, model="mlp", iid=True,
                    costs="testbed", topology="full", rho=1.0,
                    setting="B", error_model="discard", medium="wifi",

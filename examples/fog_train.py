@@ -6,6 +6,26 @@ imperfect information (setting E), with the Table-III cost decomposition.
 
 --full restores paper scale (n=10, T=100, tau=10, 60k images); default is
 a few minutes on CPU.
+
+Engine / mesh knobs
+-------------------
+``--engine`` selects the training engine (default "auto"):
+
+* ``scan``    — the whole horizon as one compiled ``jax.lax.scan`` on a
+  single device;
+* ``sharded`` — the same scan partitioned across every visible device
+  via ``shard_map`` over a 1-D "data" mesh
+  (``repro.launch.mesh.make_data_mesh``): the n fog devices are padded
+  to a mesh multiple with phantom inactive devices, the every-τ
+  H-weighted aggregation runs as a cross-shard ``psum``, and test
+  evaluation is streamed off the hot path by the engine's
+  AsyncEvaluator. ``auto`` picks this whenever more than one device is
+  visible — force a multi-device CPU mesh with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``;
+* ``legacy``  — the original per-round loop (numerical oracle).
+
+Programmatic callers can pass an explicit mesh:
+``run_network_aware(..., engine="sharded", mesh=make_data_mesh(4))``.
 """
 import argparse
 import json
@@ -17,9 +37,11 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--setting", default="B", choices=list("ABCDE"))
     ap.add_argument("--non-iid", action="store_true")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "scan", "sharded", "legacy"])
     args = ap.parse_args()
     argv = ["--mode", "fog", "--model", "cnn", "--setting", args.setting,
-            "--costs", "testbed"]
+            "--costs", "testbed", "--engine", args.engine]
     if args.non_iid:
         argv.append("--non-iid")
     if args.full:

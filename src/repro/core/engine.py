@@ -1,4 +1,4 @@
-"""Scan-compiled federated training engine.
+"""Scan- and shard-compiled federated training engine.
 
 The hot path of ``run_network_aware`` used to dispatch T separate jitted
 steps, re-padding and re-uploading the batch tensor every round.  Here
@@ -14,12 +14,23 @@ the whole horizon is one device-resident program:
   with donated carries (donation is skipped on CPU where XLA does not
   support it).
 
+``run_rounds_sharded`` partitions the fog-device axis across a 1-D
+"data" mesh via ``shard_map`` (``distributed/sharding.py`` shim,
+``launch/mesh.make_data_mesh``): each mesh shard scans its slice of
+the staged ``(T, n, P)`` stream with its slice of the stacked
+parameters, and the every-τ H-weighted aggregation is a cross-shard
+``psum`` reduction. Test evaluation is streamed OFF the hot path by an
+:class:`AsyncEvaluator` — the scan emits global-parameter snapshots and
+eval dispatches asynchronously after training, so no per-τ blocking
+``eval_fn`` sits inside a sweep loop.
+
 ``run_rounds_legacy`` preserves the original per-round Python loop —
 it is the numerical oracle for the equivalence tests and the baseline
 for the ``engine_throughput`` benchmark.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -40,8 +51,11 @@ PRESTAGE_LIMIT_BYTES = 256 * 1024 ** 2
 # host array alive so the id() key cannot be recycled, and a sampled
 # checksum catches in-place mutation (normalization/augmentation) between
 # calls — sparse point edits can still slip through, so treat arrays
-# passed to the engine as immutable
-_DEVICE_CACHE: dict = {}
+# passed to the engine as immutable.  LRU: only the least-recently-used
+# entry is evicted at capacity, so the datasets a sweep keeps touching
+# stay pinned instead of being flushed wholesale mid-sweep.
+_DEVICE_CACHE_CAP = 16
+_DEVICE_CACHE: collections.OrderedDict = collections.OrderedDict()
 
 
 def _to_device_cached(arr: np.ndarray):
@@ -52,9 +66,11 @@ def _to_device_cached(arr: np.ndarray):
            float(np.asarray(sample, np.float64).sum()))
     hit = _DEVICE_CACHE.get(key)
     if hit is None:
-        if len(_DEVICE_CACHE) >= 16:
-            _DEVICE_CACHE.clear()
+        while len(_DEVICE_CACHE) >= _DEVICE_CACHE_CAP:
+            _DEVICE_CACHE.popitem(last=False)     # oldest entry only
         hit = _DEVICE_CACHE[key] = (arr, jnp.asarray(arr))
+    else:
+        _DEVICE_CACHE.move_to_end(key)
     return hit[1]
 
 
@@ -62,6 +78,15 @@ def make_model(name: str, rng):
     specs_fn, apply_fn = mm.MODELS[name]
     params = init_params(specs_fn(), rng, jnp.float32)
     return params, apply_fn
+
+
+def resolve_engine(engine: str) -> str:
+    """The single "auto" dispatch rule shared by every caller (CLI,
+    examples, Scenario sweeps): sharded whenever a data mesh of more
+    than one device is available, scan otherwise."""
+    if engine == "auto":
+        return "sharded" if jax.device_count() > 1 else "scan"
+    return engine
 
 
 def _stack(params, n):
@@ -195,6 +220,208 @@ def run_rounds_scan(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
     return {"device_loss": list(np.asarray(losses)),
             "test_loss": [float(v) for v in tl[agg_rounds]],
             "test_acc": [float(v) for v in ta[agg_rounds]],
+            "agg_round": [int(t) for t in agg_rounds],
+            "H_agg": list(H_at[agg_rounds])}
+
+
+# ---------------------------------------------------------------------------
+# device-sharded path (shard_map over the fog-device axis)
+# ---------------------------------------------------------------------------
+
+
+class AsyncEvaluator:
+    """Streams test evaluation off the training hot path.
+
+    ``submit`` dispatches one jitted eval and returns immediately (JAX
+    async dispatch — nothing blocks until ``collect``), so a sweep can
+    keep training the next scenario while eval results trickle from
+    device to host. The test set is pinned device-resident; submissions
+    hold device arrays only, which keeps them donation-friendly for the
+    surrounding engine programs.
+    """
+
+    def __init__(self, apply_fn, x_te, y_te):
+        self._fn = _eval_program(apply_fn)
+        self._x = _to_device_cached(x_te)
+        self._y = _to_device_cached(y_te)
+        self._pending: list = []
+
+    def submit(self, params) -> None:
+        self._pending.append(self._fn(params, self._x, self._y))
+
+    def collect(self) -> tuple[list[float], list[float]]:
+        """Block once for everything submitted; returns (losses, accs)."""
+        losses = [float(tl) for tl, _ in self._pending]
+        accs = [float(ta) for _, ta in self._pending]
+        self._pending = []
+        return losses, accs
+
+
+@functools.lru_cache(maxsize=8)
+def _eval_program(apply_fn):
+    def ev(p, x, y):
+        logits = apply_fn(p, x)
+        return mm.ce_loss(logits, y), mm.accuracy(logits, y)
+
+    return jax.jit(ev)
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_program(apply_fn, eta: float, prestage: bool, mesh):
+    """One jitted shard_map program per (model, η, staging mode, mesh).
+
+    Inside the shard each per-device operand carries the LOCAL slice of
+    the fog-device axis; aggregation is an H-weighted ``psum``. Global
+    parameters stay replicated (they leave every aggregation identical
+    on all shards, psum being deterministic per reduction order), and
+    the scan emits a per-round snapshot of them for the off-hot-path
+    evaluator instead of evaluating inline.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
+
+    vstep = jax.vmap(_device_step_fn(apply_fn, eta))
+    axis = "data"
+
+    def agg_psum(W, H, contributing, prev_global):
+        """Eq. (4) across shards: Σ over the local slice, psum across."""
+        Hc = H * contributing
+        tot = jax.lax.psum(Hc.sum(), axis)
+
+        def agg(a, old):
+            num = jax.lax.psum(jnp.einsum("n...,n->...", a, Hc), axis)
+            return jnp.where(tot > 0, num / jnp.maximum(tot, 1e-9), old)
+
+        return jax.tree_util.tree_map(agg, W, prev_global)
+
+    def train_local(W0, wg0, x_tr, xb_all, idx_all, yb_all, w_all,
+                    counts, act, is_agg):
+        # round operands arrive as (W windows, tau, n_loc, ...): the
+        # outer scan walks aggregation windows and snapshots the global
+        # params ONCE per window (aggregations land on window-last
+        # rounds by construction), so the snapshot output is
+        # O(T/tau · |params|) instead of O(T · |params|)
+        n_loc = counts.shape[2]
+
+        def body(carry, xs):
+            W, wg, H, waiting = carry
+            xb, idx, yb, w, cnt, a, agg = xs
+            if not prestage:
+                xb = jnp.take(x_tr, idx, axis=0)
+            active = a * (1.0 - waiting)
+            W, losses = vstep(W, xb, yb, w, active)
+            H = H + cnt * active
+
+            def do_agg(ops):
+                W, wg, H, waiting = ops
+                wg2 = agg_psum(W, H, active, wg)
+                W2 = _sync(W, wg2, a > 0.5)
+                return W2, wg2, jnp.zeros_like(H), 1.0 - a, H
+
+            def skip(ops):
+                W, wg, H, waiting = ops
+                return W, wg, H, waiting, H
+
+            W, wg, H, waiting, H_at = jax.lax.cond(
+                agg, do_agg, skip, (W, wg, H, waiting))
+            return (W, wg, H, waiting), (losses, H_at)
+
+        def window(carry, xs_w):
+            carry, ys = jax.lax.scan(body, carry, xs_w)
+            return carry, (*ys, carry[1])        # wg after the window
+
+        carry0 = (W0, wg0, jnp.zeros(n_loc, jnp.float32),
+                  jnp.zeros(n_loc, jnp.float32))
+        xs = (xb_all, idx_all, yb_all, w_all, counts, act, is_agg)
+        _, ys = jax.lax.scan(window, carry0, xs)
+        return ys                  # (losses, H_at, per-window wg)
+
+    dev = P(axis)                         # leading fog-device axis
+    w_dev = P(None, None, axis)           # (windows, tau, n, ...)
+    in_specs = (dev, P(), P(), w_dev, w_dev, w_dev, w_dev, w_dev, w_dev,
+                P())
+    out_specs = (w_dev, w_dev, P())
+    fn = shard_map(train_local, mesh=mesh,
+                   in_specs=in_specs, out_specs=out_specs)
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(fn, donate_argnums=donate)
+
+
+def _pad_axis(a, size: int, axis: int):
+    if a.shape[axis] == size:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, size - a.shape[axis])
+    return np.pad(a, pad)
+
+
+def run_rounds_sharded(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
+                       act_all, tau: int, eta: float, max_pts: int, *,
+                       mesh=None) -> dict:
+    """Device-sharded scan: the n fog devices are partitioned across the
+    mesh's "data" axis; n is padded up to a mesh multiple with phantom
+    always-inactive devices (zero weights and counts — they never train,
+    contribute H=0 and are masked out of every aggregation). The round
+    axis is padded to a multiple of tau and scanned as (T/tau, tau)
+    aggregation windows (padded rounds are inactive and non-agg, so
+    they train nothing). Matches ``run_rounds_scan`` up to cross-shard
+    reduction reassociation; eval is streamed off the hot path via
+    :class:`AsyncEvaluator` from the per-window parameter snapshots."""
+    from repro.launch.mesh import make_data_mesh
+
+    if mesh is None:
+        mesh = make_data_mesh()
+    ndev = int(np.prod(mesh.devices.shape))
+    T = len(processed)
+    n = len(processed[0])
+    n_pad = -(-n // ndev) * ndev
+    T_pad = -(-T // tau) * tau
+    n_win = T_pad // tau
+
+    def stage(a, dtype=None):
+        """(T, n, ...) -> (windows, tau, n_pad, ...)."""
+        a = _pad_axis(_pad_axis(np.asarray(a, dtype), n_pad, 1), T_pad, 0)
+        return a.reshape(n_win, tau, *a.shape[1:])
+
+    idx, yb, wts, counts = pl.stage_rounds(processed, y_tr, max_pts)
+    idx, yb, wts, counts = (stage(idx), stage(yb), stage(wts),
+                            stage(counts))
+    act = stage(act_all, np.float32)
+    is_agg = (np.arange(T) + 1) % tau == 0       # window-last rounds
+    is_agg_w = _pad_axis(is_agg, T_pad, 0).reshape(n_win, tau)
+
+    x_dev = _to_device_cached(x_tr)
+    idx_dev = jnp.asarray(idx)
+    item_bytes = int(np.prod(x_tr.shape[1:], dtype=np.int64)) * 4
+    prestage = T_pad * n_pad * max_pts * item_bytes <= PRESTAGE_LIMIT_BYTES
+    if prestage:
+        xb_all, idx_arg = jnp.take(x_dev, idx_dev, axis=0), None
+    else:
+        xb_all, idx_arg = None, idx_dev
+
+    fn = _sharded_program(apply_fn, float(eta), prestage, mesh)
+    losses, H_at, wg_win = fn(
+        _stack(params, n_pad), params, x_dev, xb_all, idx_arg,
+        jnp.asarray(yb), jnp.asarray(wts), jnp.asarray(counts),
+        jnp.asarray(act), jnp.asarray(is_agg_w))
+
+    # eval streams off the hot path: submissions dispatch async, the
+    # single blocking collect happens after the training program. An
+    # aggregation at round t is the last round of window t // tau, so
+    # that window's snapshot IS the post-aggregation global params.
+    agg_rounds = np.nonzero(is_agg)[0]
+    ev = AsyncEvaluator(apply_fn, x_te, y_te)
+    for t in agg_rounds:
+        w = int(t) // tau
+        ev.submit(jax.tree_util.tree_map(lambda a, w=w: a[w], wg_win))
+    test_loss, test_acc = ev.collect()
+
+    losses = np.asarray(losses).reshape(T_pad, n_pad)[:T, :n]
+    H_at = np.asarray(H_at).reshape(T_pad, n_pad)[:T, :n]
+    return {"device_loss": list(losses),
+            "test_loss": test_loss,
+            "test_acc": test_acc,
             "agg_round": [int(t) for t in agg_rounds],
             "H_agg": list(H_at[agg_rounds])}
 

@@ -9,8 +9,10 @@ Data offloading/discarding is applied to the physical sample streams by
 
 The training loop itself lives in :mod:`repro.core.engine`:
 ``run_network_aware`` is a thin wrapper that prepares the sample streams
-on the host and dispatches to the scan-compiled engine (default) or the
-legacy per-round loop (``engine="legacy"``, kept as oracle/baseline).
+on the host and dispatches to the scan-compiled engine (default), the
+device-sharded engine (``engine="sharded"`` — shard_map over a "data"
+mesh, psum aggregation, eval streamed off the hot path) or the legacy
+per-round loop (``engine="legacy"``, kept as oracle/baseline).
 
 Baselines: ``centralized`` (all data at one node) and ``federated``
 (no movement, G_i = D_i) — both used by the Table II/III benchmarks.
@@ -18,6 +20,7 @@ Baselines: ``centralized`` (all data at one node) and ``federated``
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -52,13 +55,21 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                       adj: np.ndarray, plan: mv.MovementPlan,
                       streams: pl.FogStreams | None = None,
                       activity: np.ndarray | None = None,
-                      engine: str = "scan") -> dict:
+                      engine: str = "scan", mesh=None) -> dict:
     """Train with a given movement plan. Returns history dict.
 
     ``activity`` (T, n) bool — optional churn trace (§V-E); inactive
     devices collect nothing, don't train, and miss aggregations.
-    ``engine`` — "scan" (one compiled lax.scan over all rounds) or
-    "legacy" (the original per-round loop).
+    ``engine`` — "scan" (one compiled lax.scan over all rounds),
+    "sharded" (the scan partitioned across a "data" device mesh via
+    shard_map, aggregation as a cross-shard psum, eval streamed off the
+    hot path — see ``core.engine.run_rounds_sharded``), "legacy" (the
+    original per-round loop, kept as the numerical oracle), or "auto"
+    (sharded on multi-device hosts, scan otherwise).
+    ``mesh`` — optional 1-D "data" mesh for the sharded engine
+    (default: ``launch.mesh.make_data_mesh()`` over all visible
+    devices; n is padded to a mesh multiple with phantom inactive
+    devices).
 
     The scan engine pins ``x_tr``/``x_te``/``y_te`` device-resident
     across calls (keyed by identity + a sampled checksum): treat the
@@ -100,11 +111,14 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     hist["processed_counts"] = [[len(ix) for ix in processed[t]]
                                 for t in range(cfg.T)]
 
+    engine = eng.resolve_engine(engine)
     runners = {"scan": eng.run_rounds_scan,
+               "sharded": functools.partial(eng.run_rounds_sharded,
+                                            mesh=mesh),
                "legacy": eng.run_rounds_legacy}
     if engine not in runners:
         raise ValueError(f"unknown engine {engine!r}; "
-                         f"expected one of {sorted(runners)}")
+                         f"expected one of {sorted(runners)} or 'auto'")
     runner = runners[engine]
     hist.update(runner(apply_fn, w_global, x_tr, y_tr, x_te, y_te,
                        processed, act_all, cfg.tau, cfg.eta, max_pts))

@@ -24,9 +24,17 @@ Solvers:
   as quadratic hinge penalties.
 * ``theorem4_closed_form`` — hierarchical-topology closed form (Thm 4).
 
-All solvers return a :class:`MovementPlan`; ``plan_cost`` evaluates the
-paper's objective decomposition (process / transfer / discard-error),
-which benchmarks/table3..table4 consume.
+All solvers return a :class:`MovementPlan`. Its core is SPARSE: a
+COO-style edge list ``(t, src, dst, qty)`` holding only realized
+transfers — the fog setting is large-n and the plans the solvers emit
+touch O(T·n) edges, so materializing the dense ``(T, n, n)`` tensor
+dominated wall time and memory at n ≥ 512. The dense ``.s`` view is a
+lazy property kept for the oracles/tests; ``greedy_linear``,
+``repair_capacities``, ``plan_cost`` (and ``data/pipeline``'s
+``apply_movement``) all operate on edges, with at most O(n²) reused
+per-round scratch. ``plan_cost`` evaluates the paper's objective
+decomposition (process / transfer / discard-error), which
+benchmarks/table3..table4 consume.
 """
 from __future__ import annotations
 
@@ -41,17 +49,145 @@ from repro.core.costs import CostTraces
 
 
 @dataclasses.dataclass
+class PlanEdges:
+    """COO movement edges, lexicographically sorted by (t, src, dst).
+
+    ``qty`` is the fraction of D_src(t) routed src→dst (src == dst means
+    processed locally). At most one edge per (t, src, dst)."""
+
+    t: np.ndarray    # (E,) int64
+    src: np.ndarray  # (E,) int64
+    dst: np.ndarray  # (E,) int64
+    qty: np.ndarray  # (E,) float64
+
+    def __len__(self) -> int:
+        return len(self.t)
+
+
+def _edges_from_dense(s: np.ndarray) -> PlanEdges:
+    tt, ii, jj = np.nonzero(s)           # np.nonzero is lex-sorted
+    return PlanEdges(t=tt.astype(np.int64), src=ii.astype(np.int64),
+                     dst=jj.astype(np.int64), qty=np.asarray(s[tt, ii, jj],
+                                                             np.float64))
+
+
 class MovementPlan:
-    s: np.ndarray  # (T, n, n)
-    r: np.ndarray  # (T, n)
+    """Movement decisions for all rounds.
+
+    Sparse core: ``edges`` (COO, see :class:`PlanEdges`) plus the dense
+    discard vector ``r`` (T, n). The dense ``(T, n, n)`` share tensor
+    ``.s`` is a lazily materialized property — only the dense loop
+    oracles and small-n tests should touch it; solver/benchmark hot
+    paths stay on the edge representation.
+
+    Construct either from a dense tensor (``MovementPlan(s=s, r=r)``,
+    edges extracted lazily) or directly from edges
+    (``MovementPlan(r=r, edges=edges, n=n)``).
+    """
+
+    def __init__(self, s: np.ndarray | None = None,
+                 r: np.ndarray | None = None, *,
+                 edges: PlanEdges | None = None, n: int | None = None):
+        if r is None:
+            raise TypeError("MovementPlan requires r")
+        self.r = np.asarray(r)
+        if s is not None:
+            s = np.asarray(s)
+            self._dense: np.ndarray | None = s
+            self._edges: PlanEdges | None = edges
+            self._n = s.shape[2]
+        elif edges is not None:
+            if n is None:
+                raise TypeError("edge-constructed MovementPlan requires n")
+            self._dense = None
+            self._edges = edges
+            self._n = int(n)
+        else:
+            raise TypeError("MovementPlan requires s or edges")
+        self._splits: np.ndarray | None = None
+
+    # -- representation views ------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self._n
+
+    @property
+    def T(self) -> int:
+        return self.r.shape[0]
+
+    @property
+    def edges(self) -> PlanEdges:
+        if self._edges is None:
+            self._edges = _edges_from_dense(self._dense)
+        return self._edges
+
+    @property
+    def s(self) -> np.ndarray:
+        """Dense (T, n, n) view — materialized lazily and cached.
+
+        Oracle/test convenience only: O(T·n²) memory."""
+        if self._dense is None:
+            e = self._edges
+            s = np.zeros((self.T, self._n, self._n))
+            np.add.at(s, (e.t, e.src, e.dst), e.qty)
+            self._dense = s
+        return self._dense
+
+    def _round_splits(self) -> np.ndarray:
+        if self._splits is None:
+            self._splits = np.searchsorted(self.edges.t,
+                                           np.arange(self.T + 1))
+        return self._splits
+
+    def round_edges(self, t: int):
+        """(src, dst, qty) views of round t's edges (sorted by src, dst)."""
+        sp = self._round_splits()
+        e = self.edges
+        sl = slice(sp[t], sp[t + 1])
+        return e.src[sl], e.dst[sl], e.qty[sl]
+
+    def round_dense(self, t: int, out: np.ndarray | None = None
+                    ) -> np.ndarray:
+        """Round t as a dense (n, n) matrix, written into ``out`` when
+        given (zeroed first) so per-round consumers can reuse a single
+        buffer instead of materializing (T, n, n)."""
+        if out is None:
+            out = np.zeros((self._n, self._n))
+        else:
+            out[:] = 0.0
+        src, dst, qty = self.round_edges(t)
+        out[src, dst] = qty
+        return out
+
+    def diag(self) -> np.ndarray:
+        """s_ii(t) for all rounds as a dense (T, n) array."""
+        e = self.edges
+        loc = e.src == e.dst
+        d = np.zeros((self.T, self._n))
+        d[e.t[loc], e.src[loc]] = e.qty[loc]
+        return d
+
+    def offload_fraction(self) -> np.ndarray:
+        """Σ_{j≠i} s_ij(t) as a dense (T, n) array (edge reduction)."""
+        e = self.edges
+        off = e.src != e.dst
+        out = np.zeros((self.T, self._n))
+        np.add.at(out, (e.t[off], e.src[off]), e.qty[off])
+        return out
+
+    # -- paper quantities ----------------------------------------------
 
     def processed(self, D: np.ndarray) -> np.ndarray:
         """G[t,i] = s_ii(t)·D_i(t) + Σ_{j≠i} s_ji(t-1)·D_j(t-1)  (eq. 6)."""
         T, n = self.r.shape
-        G = np.einsum("tii,ti->ti", self.s, D).astype(float).copy()
-        s_off = self.s * (1.0 - np.eye(n))[None]
-        inc = np.einsum("tji,tj->ti", s_off, D)   # arrives at t+1
-        G[1:] += inc[:-1]
+        e = self.edges
+        G = self.diag() * D
+        off = e.src != e.dst
+        te, se, de, qe = e.t[off], e.src[off], e.dst[off], e.qty[off]
+        arrive = te + 1 < T                   # arrives at t+1, in-horizon
+        np.add.at(G, (te[arrive] + 1, de[arrive]),
+                  qe[arrive] * D[te[arrive], se[arrive]])
         return G
 
     def check(self, adj: np.ndarray, atol: float = 1e-5):
@@ -66,8 +202,10 @@ class MovementPlan:
 
 def no_movement_plan(T: int, n: int) -> MovementPlan:
     """Setting A: offloading and discarding disabled (G_i = D_i)."""
-    s = np.tile(np.eye(n)[None], (T, 1, 1))
-    return MovementPlan(s=s, r=np.zeros((T, n)))
+    tt = np.repeat(np.arange(T, dtype=np.int64), n)
+    ii = np.tile(np.arange(n, dtype=np.int64), T)
+    edges = PlanEdges(t=tt, src=ii, dst=ii, qty=np.ones(T * n))
+    return MovementPlan(r=np.zeros((T, n)), edges=edges, n=n)
 
 
 def _adj_t(adj: np.ndarray, T: int) -> np.ndarray:
@@ -85,16 +223,18 @@ PALLAS_MIN_N = 256
 
 
 def _plan_from_choice(choice: np.ndarray, k: np.ndarray) -> MovementPlan:
-    """(T, n) 3-way decisions + best-neighbor indices -> bang-bang plan."""
+    """(T, n) 3-way decisions + best-neighbor indices -> bang-bang plan.
+
+    Emits COO edges directly — one edge per non-discarding (t, i) — so
+    the greedy path never allocates the (T, n, n) share tensor."""
     T, n = choice.shape
-    s = np.zeros((T, n, n))
+    tt, ii = np.nonzero(choice != 2)         # lex-sorted by (t, src)
+    dst = np.where(choice[tt, ii] == 1, k[tt, ii], ii)
     r = np.zeros((T, n))
-    tt, ii = np.nonzero(choice == 0)
-    s[tt, ii, ii] = 1.0
-    tt, ii = np.nonzero(choice == 1)
-    s[tt, ii, k[tt, ii]] = 1.0
     r[choice == 2] = 1.0
-    return MovementPlan(s=s, r=r)
+    edges = PlanEdges(t=tt.astype(np.int64), src=ii.astype(np.int64),
+                      dst=dst.astype(np.int64), qty=np.ones(len(tt)))
+    return MovementPlan(r=r, edges=edges, n=n)
 
 
 def greedy_linear(traces: CostTraces, adj: np.ndarray, *,
@@ -146,13 +286,22 @@ def _greedy_linear_device(traces: CostTraces, adj: np.ndarray, *,
     adj3 = _adj_t(adj, T).copy()
     adj3[T - 1] = False    # no off-horizon offloading in the final round
     c_next = np.concatenate([traces.c_node[1:], traces.c_node[-1:]])
-    choice, best_j, _ = ops.greedy_decision_batched(
+    # device-side COO emission: fixed-shape (T·n,) edge arrays from the
+    # kernel, packed into the sparse plan without a dense (T, n, n) stop
+    t_idx, src, dst, keep, _ = ops.greedy_edges_batched(
         jnp.asarray(traces.c_link, jnp.float32),
         jnp.asarray(c_next, jnp.float32),
         jnp.asarray(traces.c_node, jnp.float32),
         jnp.asarray(traces.f_err, jnp.float32),
         jnp.asarray(adj3), use_pallas=use_pallas)
-    return _plan_from_choice(np.asarray(choice), np.asarray(best_j))
+    keep = np.asarray(keep)
+    r = np.zeros((T, n))
+    r.reshape(-1)[~keep] = 1.0
+    edges = PlanEdges(t=np.asarray(t_idx)[keep].astype(np.int64),
+                      src=np.asarray(src)[keep].astype(np.int64),
+                      dst=np.asarray(dst)[keep].astype(np.int64),
+                      qty=np.ones(int(keep.sum())))
+    return MovementPlan(r=r, edges=edges, n=n)
 
 
 def greedy_linear_scalar(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
@@ -213,22 +362,108 @@ def greedy_linear_loop(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
     return MovementPlan(s=s, r=r)
 
 
+def _repair_round(s_t, r_t, prev, t, T, adj3, traces, D, diag_next,
+                  dg, eye):
+    """Repair one round in place on the dense (n, n) buffer ``s_t``.
+
+    Exactly the arithmetic of the dense vectorized repair (which is
+    bitwise-equal to ``repair_capacities_loop``): vectorized violation
+    detection, scalar replay of spill events in the oracle's order.
+    ``prev`` is round t−1 post-repair (None at t=0); ``diag_next`` is
+    the PRE-repair s_ii of round t+1 (rounds ahead are untouched when
+    round t is repaired, so the original plan diagonal is the oracle
+    value)."""
+    n = s_t.shape[0]
+    Dt = D[t]
+    Dt_safe = np.maximum(Dt, 1e-12)
+    # local processing this round from s_ii(t) plus arrivals from t-1
+    if t > 0:
+        vol_prev = prev * D[t - 1][:, None]
+        arrivals = vol_prev.sum(0) - vol_prev[dg, dg]
+    else:
+        arrivals = np.zeros(n)
+    # (1) link capacity
+    viol = (adj3[t] & ~eye) & (s_t * Dt[:, None] > traces.cap_link[t])
+    if viol.any():
+        spill_ij = np.where(
+            viol, s_t - traces.cap_link[t] / Dt_safe[:, None], 0.0)
+        s_t -= spill_ij
+        for i, j in zip(*np.nonzero(spill_ij > 0)):   # source-major
+            _revert(s_t, r_t, t, i, spill_ij[i, j], traces, Dt, arrivals)
+    # (2) node capacity of receivers at t+1 (arrivals processed then)
+    # violation detection is vectorized; the cut sequence per
+    # overloaded receiver replicates the original sender scan so the
+    # arithmetic (and therefore every knife-edge capacity
+    # comparison in _revert) matches the loop oracle bit for bit
+    if t + 1 < T:
+        vol = s_t * Dt[:, None]
+        inc = vol.sum(0) - vol[dg, dg]
+        over = inc + diag_next * D[t + 1] - traces.cap_node[t + 1]
+        for j in np.nonzero(over > 1e-9)[0]:
+            excess = over[j]
+            for i in np.nonzero(vol[:, j] > 0)[0]:
+                if i == j:
+                    continue
+                if excess <= 1e-12:
+                    break
+                cut = min(vol[i, j], excess)
+                spill = cut / max(Dt[i], 1e-12)
+                s_t[i, j] -= spill
+                excess -= cut
+                _revert(s_t, r_t, t, i, spill, traces, Dt, arrivals)
+    # (3) own node capacity at t for s_ii
+    over = s_t[dg, dg] * Dt + arrivals - traces.cap_node[t]
+    mask = over > 1e-9
+    if mask.any():
+        cut = np.minimum(s_t[dg, dg] * Dt, np.maximum(over, 0.0))
+        spill = np.where(mask, cut / Dt_safe, 0.0)
+        s_t[dg, dg] -= spill
+        r_t += spill
+
+
 def repair_capacities(plan: MovementPlan, traces: CostTraces,
                       adj: np.ndarray, D: np.ndarray) -> MovementPlan:
     """Local repair of capacity violations (Theorem 6 guidance).
 
-    Forward pass over t (sequential — arrivals chain rounds together).
-    Violation *detection* is vectorized: (1) all link-capacity clips for
-    a round come from one masked array comparison; (2) receiver
-    overloads at t+1 come from one volume-matrix reduction. The spill
-    *events* themselves — cutting an overloaded receiver's senders in
-    index order and reverting each spill at the SOURCE to its next-best
-    option (process locally if c_i ≤ f_i and node capacity remains,
-    else discard) — replay the original per-event scalar scan, so the
-    result matches ``repair_capacities_loop`` bit for bit. Theorem 6's
-    regime has few violations, so the per-event part stays off the hot
-    path.
+    Forward pass over t (sequential — arrivals chain rounds together),
+    STREAMED over the sparse plan: each round is expanded into one of
+    two reused dense (n, n) scratch buffers (current round + previous
+    round for arrivals), repaired with the vectorized-detection /
+    scalar-replay rule of :func:`_repair_round`, and re-compressed to
+    edges. Never materializes the (T, n, n) tensor, yet remains
+    bitwise-equal to ``repair_capacities_dense`` and
+    ``repair_capacities_loop`` (fractional convex plans included).
     """
+    T, n = plan.r.shape
+    adj3 = _adj_t(adj, T)
+    r = plan.r.copy()
+    dg = np.arange(n)
+    eye = np.eye(n, dtype=bool)
+    diag0 = plan.diag()                  # pre-repair s_ii, read one round ahead
+    cur = np.zeros((n, n))
+    prev = np.zeros((n, n))
+    ts, srcs, dsts, qtys = [], [], [], []
+    for t in range(T):
+        plan.round_dense(t, out=cur)
+        _repair_round(cur, r[t], prev if t > 0 else None, t, T, adj3,
+                      traces, D, diag0[t + 1] if t + 1 < T else None,
+                      dg, eye)
+        ii, jj = np.nonzero(cur)
+        ts.append(np.full(len(ii), t, np.int64))
+        srcs.append(ii.astype(np.int64))
+        dsts.append(jj.astype(np.int64))
+        qtys.append(cur[ii, jj].copy())
+        prev, cur = cur, prev            # repaired round feeds t+1 arrivals
+    edges = PlanEdges(t=np.concatenate(ts), src=np.concatenate(srcs),
+                      dst=np.concatenate(dsts), qty=np.concatenate(qtys))
+    return MovementPlan(r=r, edges=edges, n=n)
+
+
+def repair_capacities_dense(plan: MovementPlan, traces: CostTraces,
+                            adj: np.ndarray, D: np.ndarray) -> MovementPlan:
+    """Dense-tensor repair (the pre-sparse vectorized path) — preserved
+    as the oracle/baseline for the streamed sparse ``repair_capacities``
+    and the ``movement_scale`` benchmark."""
     T, n = plan.r.shape
     adj3 = _adj_t(adj, T)
     s = plan.s.copy()
@@ -236,63 +471,21 @@ def repair_capacities(plan: MovementPlan, traces: CostTraces,
     dg = np.arange(n)
     eye = np.eye(n, dtype=bool)
     for t in range(T):
-        Dt = D[t]
-        Dt_safe = np.maximum(Dt, 1e-12)
-        # local processing this round from s_ii(t) plus arrivals from t-1
-        if t > 0:
-            vol_prev = s[t - 1] * D[t - 1][:, None]
-            arrivals = vol_prev.sum(0) - vol_prev[dg, dg]
-        else:
-            arrivals = np.zeros(n)
-        # (1) link capacity
-        viol = (adj3[t] & ~eye) & (s[t] * Dt[:, None] > traces.cap_link[t])
-        if viol.any():
-            spill_ij = np.where(
-                viol, s[t] - traces.cap_link[t] / Dt_safe[:, None], 0.0)
-            s[t] -= spill_ij
-            for i, j in zip(*np.nonzero(spill_ij > 0)):   # source-major
-                _revert(s, r, t, i, spill_ij[i, j], traces, Dt, arrivals)
-        # (2) node capacity of receivers at t+1 (arrivals processed then)
-        # violation detection is vectorized; the cut sequence per
-        # overloaded receiver replicates the original sender scan so the
-        # arithmetic (and therefore every knife-edge capacity
-        # comparison in _revert) matches the loop oracle bit for bit
-        if t + 1 < T:
-            vol = s[t] * Dt[:, None]
-            inc = vol.sum(0) - vol[dg, dg]
-            over = inc + s[t + 1][dg, dg] * D[t + 1] \
-                - traces.cap_node[t + 1]
-            for j in np.nonzero(over > 1e-9)[0]:
-                excess = over[j]
-                for i in np.nonzero(vol[:, j] > 0)[0]:
-                    if i == j:
-                        continue
-                    if excess <= 1e-12:
-                        break
-                    cut = min(vol[i, j], excess)
-                    spill = cut / max(Dt[i], 1e-12)
-                    s[t, i, j] -= spill
-                    excess -= cut
-                    _revert(s, r, t, i, spill, traces, Dt, arrivals)
-        # (3) own node capacity at t for s_ii
-        over = s[t][dg, dg] * Dt + arrivals - traces.cap_node[t]
-        mask = over > 1e-9
-        if mask.any():
-            cut = np.minimum(s[t][dg, dg] * Dt, np.maximum(over, 0.0))
-            spill = np.where(mask, cut / Dt_safe, 0.0)
-            s[t][dg, dg] -= spill
-            r[t] += spill
+        _repair_round(s[t], r[t], s[t - 1] if t > 0 else None, t, T, adj3,
+                      traces, D, s[t + 1][dg, dg] if t + 1 < T else None,
+                      dg, eye)
     return MovementPlan(s=s, r=r)
 
 
-def _revert(s, r, t, i, spill, traces, Dt, arrivals):
-    """Send a spilled fraction back to i's next-best option."""
-    cap_left = traces.cap_node[t, i] - (s[t, i, i] * Dt[i] + arrivals[i])
+def _revert(s_t, r_t, t, i, spill, traces, Dt, arrivals):
+    """Send a spilled fraction back to i's next-best option (operates on
+    round t's dense (n, n) view ``s_t`` and discard row ``r_t``)."""
+    cap_left = traces.cap_node[t, i] - (s_t[i, i] * Dt[i] + arrivals[i])
     if (traces.c_node[t, i] <= traces.f_err[t, i]
             and cap_left >= spill * Dt[i]):
-        s[t, i, i] += spill
+        s_t[i, i] += spill
     else:
-        r[t, i] += spill
+        r_t[i] += spill
 
 
 def repair_capacities_loop(plan: MovementPlan, traces: CostTraces,
@@ -315,7 +508,7 @@ def repair_capacities_loop(plan: MovementPlan, traces: CostTraces,
                 if s[t, i, j] * Dt[i] > cap:
                     spill = s[t, i, j] - cap / max(Dt[i], 1e-12)
                     s[t, i, j] -= spill
-                    _revert(s, r, t, i, spill, traces, Dt, arrivals)
+                    _revert(s[t], r[t], t, i, spill, traces, Dt, arrivals)
         if t + 1 < T:
             inc = (s[t] * Dt[:, None]).sum(0) - np.diag(s[t]) * Dt
             local_next = np.diag(s[t + 1]) * D[t + 1]
@@ -332,7 +525,7 @@ def repair_capacities_loop(plan: MovementPlan, traces: CostTraces,
                     spill = cut / max(Dt[i], 1e-12)
                     s[t, i, j] -= spill
                     excess -= cut
-                    _revert(s, r, t, i, spill, traces, Dt, arrivals)
+                    _revert(s[t], r[t], t, i, spill, traces, Dt, arrivals)
         G_now = np.diag(s[t]) * Dt + arrivals
         over = G_now - traces.cap_node[t]
         for i in np.nonzero(over > 1e-9)[0]:
@@ -510,11 +703,15 @@ def theorem4_closed_form(c: np.ndarray, c_server: float, c_t: float,
 
 def plan_cost(plan: MovementPlan, traces: CostTraces, D: np.ndarray, *,
               error_model: str = "discard", gamma: float = 1.0) -> dict:
+    """Objective decomposition on the sparse plan: the transfer term and
+    moved-rate reduce over realized edges only (no (T, n, n) pages)."""
     T, n = plan.r.shape
     G = plan.processed(D)
-    off = plan.s * (1 - np.eye(n))[None]
+    e = plan.edges
+    off = e.src != e.dst
+    te, se, de, qe = e.t[off], e.src[off], e.dst[off], e.qty[off]
     proc = float(np.sum(G * traces.c_node))
-    trans = float(np.sum(off * D[:, :, None] * traces.c_link))
+    trans = float(np.sum(qe * D[te, se] * traces.c_link[te, se, de]))
     if error_model == "sqrt":
         disc = float(np.sum(traces.f_err * gamma / np.sqrt(G + 1e-3)))
     elif error_model == "neg_G":
@@ -523,11 +720,12 @@ def plan_cost(plan: MovementPlan, traces: CostTraces, D: np.ndarray, *,
         disc = float(np.sum(traces.f_err * D * plan.r))
     total_data = float(D.sum())
     total = proc + trans + disc
+    off_frac = plan.offload_fraction()          # Σ_{j≠i} s_ij as (T, n)
     return {"process": proc, "transfer": trans, "discard": disc,
             "total": total,
             "unit": total / max(total_data, 1e-9),
             "data_total": total_data,
-            "moved_rate": float((off.sum(2) * D).sum() / max(D.sum(), 1e-9)
+            "moved_rate": float((off_frac * D).sum() / max(D.sum(), 1e-9)
                                 + (plan.r * D).sum() / max(D.sum(), 1e-9)),
             "processed_frac": float(G.sum() / max(D.sum(), 1e-9)),
             "discarded_frac": float((plan.r * D).sum() / max(D.sum(), 1e-9))}

@@ -5,7 +5,9 @@
   (each device restricted to a random 5 of 10 labels) collection
 * application of a MovementPlan to the physical sample streams: offloaded
   samples travel one round (arrive at t+1), discarded samples vanish —
-  this is the data plane matching movement.py's decision plane.
+  this is the data plane matching movement.py's decision plane. Routing
+  follows the plan's SPARSE edges (``apply_movement``;
+  ``apply_movement_dense`` is the preserved dense-row oracle).
 """
 from __future__ import annotations
 
@@ -65,11 +67,57 @@ def apply_movement(streams: FogStreams, plan: MovementPlan,
     Returns processed[t][i] — global sample ids device i processes at
     round t (= retained local share + arrivals offloaded at t−1).
     Fractions are realized by randomized rounding of contiguous splits.
+
+    Operates on the plan's sparse edges: each device's (n+1,) share
+    row is reconstructed into one reused buffer from its outgoing
+    edges, so routing never touches the dense (T, n, n) tensor yet
+    stays bitwise-identical to ``apply_movement_dense`` (the preserved
+    oracle) — the reconstructed row IS the dense row.
     """
     rng = rng or np.random.default_rng(1)
     n, T = streams.n, streams.T
     # per-destination part lists; one concatenate per (t, i) at the end
     # instead of the old per-(i, j) quadratic re-concatenation
+    buckets: list[list[list[np.ndarray]]] = \
+        [[[] for _ in range(n)] for _ in range(T)]
+    row_buf = np.zeros(n + 1)
+    for t in range(T):
+        src, dst, qty = plan.round_edges(t)
+        starts_e = np.searchsorted(src, np.arange(n + 1))
+        r_t = plan.r[t]
+        for i in range(n):
+            idx = streams.collected[t][i]
+            if len(idx) == 0:
+                continue
+            idx = rng.permutation(idx)
+            row_buf[:] = 0.0
+            sl = slice(starts_e[i], starts_e[i + 1])
+            row_buf[dst[sl]] = qty[sl]
+            row_buf[n] = r_t[i]
+            fracs = np.clip(row_buf, 0, None)
+            fracs = fracs / max(fracs.sum(), 1e-12)
+            cuts = np.floor(np.cumsum(fracs) * len(idx) + 1e-9).astype(int)
+            ends = cuts[:-1]                     # last bucket = discard
+            starts = np.empty_like(ends)
+            starts[0] = 0
+            starts[1:] = ends[:-1]
+            for j in np.nonzero(ends > starts)[0]:
+                part = idx[starts[j]:ends[j]]
+                if j == i:
+                    buckets[t][i].append(part)
+                elif t + 1 < T:
+                    buckets[t + 1][j].append(part)
+    return [[np.concatenate(cell) if cell else np.empty(0, np.int64)
+             for cell in row] for row in buckets]
+
+
+def apply_movement_dense(streams: FogStreams, plan: MovementPlan,
+                         rng: np.random.Generator | None = None
+                         ) -> list[list[np.ndarray]]:
+    """Dense-row routing (the pre-sparse path) — preserved as the
+    bitwise oracle for the edge-based ``apply_movement``."""
+    rng = rng or np.random.default_rng(1)
+    n, T = streams.n, streams.T
     buckets: list[list[list[np.ndarray]]] = \
         [[[] for _ in range(n)] for _ in range(T)]
     for t in range(T):

@@ -18,23 +18,13 @@ documented limitation, DESIGN.md §4).
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map as _shard_map
 from repro.models import transformer as T
 from repro.optim import optimizers as opt_lib
-
-# jax < 0.5 ships shard_map under experimental with check_rep instead of
-# check_vma; keep both spellings working
-if hasattr(jax, "shard_map"):
-    _shard_map = partial(jax.shard_map, check_vma=False)
-else:
-    from jax.experimental.shard_map import shard_map as _shard_map_exp
-
-    _shard_map = partial(_shard_map_exp, check_rep=False)
 
 
 def make_fedavg_round(cfg, optimizer: opt_lib.Optimizer, tau: int,

@@ -117,3 +117,28 @@ def offload_greedy_batched(c_link, c_next, c_node, f_err, adj, *,
     """
     kern = functools.partial(offload_greedy, bn=bn, interpret=interpret)
     return jax.vmap(kern)(c_link, c_next, c_node, f_err, adj)
+
+
+def offload_greedy_edges(c_link, c_next, c_node, f_err, adj, *,
+                         bn: int = 128, interpret: bool | None = None):
+    """Batched Theorem-3 rule with device-side COO edge emission.
+
+    Runs the min-plus kernel for all T rounds, then materializes the
+    sparse movement plane directly: fixed-shape ``(T·n,)`` edge arrays
+    ``(t, src, dst)`` plus a keep-mask (False on discard decisions,
+    whose rows become ``r`` instead of an edge). The (T, n, n) dense
+    share tensor is never built — the host packs the masked arrays
+    straight into a ``PlanEdges`` COO list.
+
+    Returns (t_idx, src, dst, keep, choice), all (T·n,) except
+    ``choice`` which stays (T, n) for diagnostics.
+    """
+    choice, best_j, _ = offload_greedy_batched(
+        c_link, c_next, c_node, f_err, adj, bn=bn, interpret=interpret)
+    T, n = choice.shape
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (T, n), 0).reshape(-1)
+    src = jax.lax.broadcasted_iota(jnp.int32, (T, n), 1).reshape(-1)
+    flat = choice.reshape(-1)
+    dst = jnp.where(flat == 1, best_j.reshape(-1), src)
+    keep = flat != 2
+    return t_idx, src, dst, keep, choice

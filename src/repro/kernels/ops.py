@@ -11,9 +11,13 @@ from functools import partial
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.offload_greedy import offload_greedy, offload_greedy_batched
+from repro.kernels.offload_greedy import (offload_greedy,
+                                          offload_greedy_batched,
+                                          offload_greedy_edges)
 from repro.kernels.ssd_scan import ssd_scan
 
 
@@ -47,3 +51,36 @@ def greedy_decision_batched(c_link, c_next, c_node, f_err, adj, *,
     if use_pallas:
         return offload_greedy_batched(c_link, c_next, c_node, f_err, adj)
     return jax.vmap(ref.offload_greedy_ref)(c_link, c_next, c_node, f_err, adj)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def greedy_edges_batched(c_link, c_next, c_node, f_err, adj, *,
+                         use_pallas=True):
+    """Theorem-3 rule for all T rounds with COO edge emission: returns
+    fixed-shape (T·n,) ``(t, src, dst, keep)`` arrays (keep=False marks
+    discard rows) plus the (T, n) choice map — the sparse-MovementPlan
+    feed that skips the dense (T, n, n) share tensor entirely."""
+    if use_pallas:
+        return offload_greedy_edges(c_link, c_next, c_node, f_err, adj)
+    choice, best_j, _ = jax.vmap(ref.offload_greedy_ref)(
+        c_link, c_next, c_node, f_err, adj)
+    T, n = choice.shape
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (T, n), 0).reshape(-1)
+    src = jax.lax.broadcasted_iota(jnp.int32, (T, n), 1).reshape(-1)
+    flat = choice.reshape(-1)
+    dst = jnp.where(flat == 1, best_j.reshape(-1), src)
+    return t_idx, src, dst, flat != 2, choice
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_neighbors(c_link, c_next, adj, *, k=2):
+    """Top-k cheapest offload targets per (t, i): masked min-plus over
+    out-neighbors, returned as (costs (T,n,k), dst (T,n,k)) in ascending
+    cost order. k=1 reproduces the kernel's (best_cost, best_j); larger
+    k feeds repair-style next-best fallbacks without a re-solve."""
+    T, n = c_next.shape
+    eff = c_link + c_next[:, None, :]
+    eye = jnp.eye(n, dtype=bool)
+    eff = jnp.where(adj & ~eye[None], eff, jnp.inf)
+    neg, idx = jax.lax.top_k(-eff, k)
+    return -neg, idx

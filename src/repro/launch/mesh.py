@@ -24,3 +24,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many host devices exist (tests / demos)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(data: int | None = None):
+    """1-D "data" mesh for the device-sharded fog engine.
+
+    ``data`` defaults to every visible device; the engine pads the
+    fog-device axis up to a multiple of the mesh extent with phantom
+    inactive devices, so any n works on any device count (force a
+    multi-device CPU mesh with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+    """
+    return jax.make_mesh((data or jax.device_count(),), ("data",))

@@ -84,10 +84,14 @@ def run_fog(args) -> dict:
                          error_model=args.error_model)
     activity = (F.churn_activity(cfg, rng)
                 if cfg.p_exit or cfg.p_entry else None)
+    from repro.core.engine import resolve_engine
+
+    engine = resolve_engine(args.engine)
     hist = F.run_network_aware(cfg, data, traces, adj, plan,
-                               streams=streams, activity=activity)
+                               streams=streams, activity=activity,
+                               engine=engine)
     cost = mv.plan_cost(plan, traces, D, error_model=args.error_model)
-    out = {"mode": "fog", "setting": args.setting,
+    out = {"mode": "fog", "setting": args.setting, "engine": engine,
            "final_acc": hist["test_acc"][-1] if hist["test_acc"] else None,
            "acc_curve": hist["test_acc"], "cost": cost,
            "sim_before": hist["sim_before"], "sim_after": hist["sim_after"]}
@@ -225,6 +229,12 @@ def main(argv=None):
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--p-exit", type=float, default=0.0)
     ap.add_argument("--p-entry", type=float, default=0.0)
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "scan", "sharded", "legacy"],
+                    help="fog training engine: one compiled scan, the "
+                         "device-sharded scan (shard_map over a 'data' "
+                         "mesh; auto picks it on multi-device hosts), "
+                         "or the legacy per-round oracle loop")
     # lm
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--smoke", action="store_true", default=True)

@@ -1,0 +1,229 @@
+"""Sparse MovementPlan core: COO edge representation round-trips with
+the dense view, and the edge-based default paths (greedy emission,
+streamed repair, row-reconstructing apply_movement, plan_cost) are
+bitwise-equal to the preserved dense oracles — fractional convex plans
+included."""
+import numpy as np
+import pytest
+
+from repro.core import movement as mv
+from repro.core.costs import synthetic_costs, with_capacity
+from repro.core.topology import fully_connected, make_topology
+from repro.data import pipeline as pl
+
+
+def _fractional_plan(T, n, adj, rng):
+    """Dense fractional plan: random softmax rows on the support."""
+    mask = np.concatenate([(adj | np.eye(n, dtype=bool))[None].repeat(T, 0),
+                           np.ones((T, n, 1), bool)], axis=2)
+    z = np.where(mask, rng.standard_normal((T, n, n + 1)), -np.inf)
+    p = np.exp(z - z.max(2, keepdims=True))
+    p /= p.sum(2, keepdims=True)
+    return mv.MovementPlan(s=p[:, :, :n].copy(), r=p[:, :, n].copy())
+
+
+# ---------------------------------------------------------------------------
+# representation round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_dense_to_edges_to_dense_roundtrip():
+    rng = np.random.default_rng(0)
+    T, n = 5, 7
+    adj = make_topology("random", n, rng, rho=0.6)
+    plan = _fractional_plan(T, n, adj, rng)
+    dense = plan.s.copy()
+    rebuilt = mv.MovementPlan(r=plan.r, edges=plan.edges, n=n)
+    np.testing.assert_array_equal(rebuilt.s, dense)
+    np.testing.assert_array_equal(rebuilt.diag(), np.einsum("tii->ti", dense))
+
+
+def test_edges_to_dense_to_edges_roundtrip():
+    rng = np.random.default_rng(1)
+    tr = synthetic_costs(9, 6, rng)
+    plan = mv.greedy_linear(tr, make_topology("random", 9, rng, rho=0.5))
+    e1 = plan.edges
+    back = mv.MovementPlan(s=plan.s, r=plan.r)
+    e2 = back.edges
+    for a, b in ((e1.t, e2.t), (e1.src, e2.src), (e1.dst, e2.dst),
+                 (e1.qty, e2.qty)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_greedy_default_path_is_edge_native():
+    """The default greedy path must not materialize the dense tensor —
+    the (T, n, n) pages are exactly what the sparse plane removes."""
+    rng = np.random.default_rng(2)
+    tr = synthetic_costs(16, 8, rng)
+    plan = mv.greedy_linear(tr, fully_connected(16))
+    assert plan._dense is None
+    assert len(plan.edges) <= 8 * 16          # ≤ one edge per (t, i)
+    repaired = mv.repair_capacities(
+        plan, with_capacity(tr, cap_node=1e9, cap_link=1e9),
+        fully_connected(16), np.ones((8, 16)))
+    assert repaired._dense is None
+
+
+def test_no_movement_plan_is_sparse_identity():
+    plan = mv.no_movement_plan(4, 5)
+    assert plan._dense is None
+    e = plan.edges
+    np.testing.assert_array_equal(e.src, e.dst)
+    np.testing.assert_array_equal(plan.s, np.tile(np.eye(5)[None],
+                                                  (4, 1, 1)))
+
+
+def test_round_dense_and_round_edges_views():
+    rng = np.random.default_rng(3)
+    T, n = 6, 8
+    adj = make_topology("random", n, rng, rho=0.5)
+    plan = _fractional_plan(T, n, adj, rng)
+    sparse = mv.MovementPlan(r=plan.r, edges=plan.edges, n=n)
+    buf = np.empty((n, n))
+    for t in range(T):
+        np.testing.assert_array_equal(sparse.round_dense(t, out=buf),
+                                      plan.s[t])
+        src, dst, qty = sparse.round_edges(t)
+        np.testing.assert_array_equal(qty, plan.s[t][src, dst])
+
+
+def test_processed_matches_dense_einsum_oracle():
+    rng = np.random.default_rng(4)
+    T, n = 7, 6
+    adj = make_topology("random", n, rng, rho=0.7)
+    plan = _fractional_plan(T, n, adj, rng)
+    D = rng.poisson(15, (T, n)).astype(float)
+    s = plan.s
+    G_dense = np.einsum("tii,ti->ti", s, D).astype(float).copy()
+    s_off = s * (1.0 - np.eye(n))[None]
+    inc = np.einsum("tji,tj->ti", s_off, D)
+    G_dense[1:] += inc[:-1]
+    np.testing.assert_allclose(plan.processed(D), G_dense,
+                               rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# bitwise equivalence of the sparse default paths vs the dense oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sparse_repair_bitwise_vs_dense_and_loop_fractional(seed):
+    rng = np.random.default_rng(seed)
+    T, n = 6, 8
+    tr = with_capacity(synthetic_costs(n, T, rng, f_err=2.0),
+                       cap_node=12.0, cap_link=4.0)
+    adj = make_topology("random", n, rng, rho=0.6)
+    D = rng.poisson(15, (T, n)).astype(float)
+    plan = _fractional_plan(T, n, adj, rng)
+    got = mv.repair_capacities(plan, tr, adj, D)        # streamed sparse
+    dense = mv.repair_capacities_dense(plan, tr, adj, D)
+    loop = mv.repair_capacities_loop(plan, tr, adj, D)
+    np.testing.assert_array_equal(got.s, dense.s)
+    np.testing.assert_array_equal(got.r, dense.r)
+    np.testing.assert_array_equal(got.s, loop.s)
+    np.testing.assert_array_equal(got.r, loop.r)
+
+
+def test_sparse_repair_bitwise_on_greedy_plans():
+    rng = np.random.default_rng(7)
+    T, n = 10, 12
+    tr = with_capacity(synthetic_costs(n, T, rng), cap_node=20.0,
+                       cap_link=8.0)
+    adj = make_topology("random", n, rng, rho=0.5)
+    D = rng.poisson(18, (T, n)).astype(float)
+    plan = mv.greedy_linear(tr, adj)
+    got = mv.repair_capacities(plan, tr, adj, D)
+    want = mv.repair_capacities_dense(plan, tr, adj, D)
+    np.testing.assert_array_equal(got.s, want.s)
+    np.testing.assert_array_equal(got.r, want.r)
+
+
+@pytest.mark.parametrize("fractional", [False, True])
+def test_apply_movement_bitwise_vs_dense_oracle(fractional):
+    rng = np.random.default_rng(11)
+    n, T = 6, 7
+    y = rng.integers(0, 10, 1500)
+    streams = pl.poisson_streams(n, T, y, rng=rng, mean_per_round=12)
+    adj = make_topology("random", n, rng, rho=0.6)
+    if fractional:
+        plan = _fractional_plan(T, n, adj, rng)
+        plan = mv.MovementPlan(r=plan.r, edges=plan.edges, n=n)
+    else:
+        plan = mv.greedy_linear(synthetic_costs(n, T, rng), adj)
+    got = pl.apply_movement(streams, plan, np.random.default_rng(42))
+    want = pl.apply_movement_dense(streams, plan,
+                                   np.random.default_rng(42))
+    for t in range(T):
+        for i in range(n):
+            np.testing.assert_array_equal(got[t][i], want[t][i])
+
+
+def test_plan_cost_matches_dense_formula():
+    rng = np.random.default_rng(5)
+    T, n = 6, 9
+    adj = make_topology("random", n, rng, rho=0.5)
+    tr = synthetic_costs(n, T, rng)
+    D = rng.poisson(20, (T, n)).astype(float)
+    for plan in (mv.greedy_linear(tr, adj),
+                 _fractional_plan(T, n, adj, rng)):
+        got = mv.plan_cost(plan, tr, D)
+        s = plan.s
+        off = s * (1 - np.eye(n))[None]
+        want_trans = float(np.sum(off * D[:, :, None] * tr.c_link))
+        want_moved = float((off.sum(2) * D).sum() / max(D.sum(), 1e-9)
+                           + (plan.r * D).sum() / max(D.sum(), 1e-9))
+        assert got["transfer"] == pytest.approx(want_trans, rel=1e-12)
+        assert got["moved_rate"] == pytest.approx(want_moved, rel=1e-12)
+
+
+def test_kernel_edge_emission_matches_choice_path():
+    """ops.greedy_edges_batched must emit exactly the edges the
+    choice/argmin pair implies."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(6)
+    T, n = 4, 32
+    tr = synthetic_costs(n, T, rng)
+    adj3 = np.broadcast_to(make_topology("random", n, rng, rho=0.5),
+                           (T, n, n)).copy()
+    adj3[T - 1] = False
+    c_next = np.concatenate([tr.c_node[1:], tr.c_node[-1:]])
+    args = (jnp.asarray(tr.c_link, jnp.float32),
+            jnp.asarray(c_next, jnp.float32),
+            jnp.asarray(tr.c_node, jnp.float32),
+            jnp.asarray(tr.f_err, jnp.float32), jnp.asarray(adj3))
+    choice, best_j, _ = ops.greedy_decision_batched(*args,
+                                                    use_pallas=False)
+    t_idx, src, dst, keep, choice2 = ops.greedy_edges_batched(
+        *args, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(choice), np.asarray(choice2))
+    choice, best_j = np.asarray(choice), np.asarray(best_j)
+    keep = np.asarray(keep)
+    np.testing.assert_array_equal(keep, (choice != 2).reshape(-1))
+    want_dst = np.where(choice == 1, best_j,
+                        np.arange(n)[None, :]).reshape(-1)
+    np.testing.assert_array_equal(np.asarray(dst)[keep], want_dst[keep])
+
+
+def test_topk_neighbors_first_column_is_argmin():
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(8)
+    T, n = 3, 16
+    tr = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=0.6)
+    c_next = np.concatenate([tr.c_node[1:], tr.c_node[-1:]])
+    costs, idx = ops.topk_neighbors(
+        jnp.asarray(tr.c_link, jnp.float32),
+        jnp.asarray(c_next, jnp.float32),
+        jnp.asarray(np.broadcast_to(adj, (T, n, n))), k=2)
+    costs, idx = np.asarray(costs), np.asarray(idx)
+    assert costs.shape == (T, n, 2) and np.all(costs[..., 0] <= costs[..., 1])
+    eff = tr.c_link + c_next[:, None, :]
+    eff = np.where(adj[None] & ~np.eye(n, dtype=bool)[None], eff, np.inf)
+    np.testing.assert_allclose(costs[..., 0], eff.min(2), rtol=1e-6)
