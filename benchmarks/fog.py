@@ -14,7 +14,9 @@ from repro.core import federated as F
 from repro.core import movement as mv
 from repro.core.costs import (synthetic_costs, testbed_like_costs,
                               with_capacity)
-from repro.core.topology import make_topology
+from repro.core.schedule import NetworkSchedule
+from repro.core.topology import (churn_schedule, link_flap_schedule,
+                                 make_topology)
 from repro.data import pipeline as pl
 from repro.data.synthetic import make_image_dataset
 
@@ -122,14 +124,26 @@ class Scenario:
     error_model: str = "sqrt"
     gamma: float = 1.0
     activity: np.ndarray | None = None
+    schedule: NetworkSchedule | None = None
+    replan: bool = True          # plan on the schedule vs the base graph
 
 
 def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
                   iid=True, costs="testbed", topology="full", rho=1.0,
                   setting="B", error_model="sqrt", gamma=1.0,
                   medium="wifi", p_exit=0.0, p_entry=0.0, f_err=0.7,
+                  dynamics=None, p_flap=0.05, p_recover=0.5, replan=True,
                   seed=0) -> Scenario:
-    """Build one sweep point (same setup recipe as ``fog_experiment``)."""
+    """Build one sweep point (same setup recipe as ``fog_experiment``).
+
+    ``dynamics``: None (auto: "churn" when p_exit/p_entry set, else
+    static), "churn" (node entry/exit via the ChurnProcess-produced
+    NetworkSchedule — the movement plane sees inactive endpoints), or
+    "flap" (seeded link up/down events). ``replan=False`` plans on the
+    base graph and realizes the plan against the schedule afterwards
+    (in-flight data over dead links is lost) — the plan-once baseline
+    of the ``network_dynamics`` bench.
+    """
     rng = np.random.default_rng(seed)
     data = dataset(scale.n_train, scale.n_test)
     cfg = F.FedConfig(n=n, T=scale.T, tau=scale.tau, eta=scale.eta,
@@ -146,12 +160,22 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
     D = pl.counts(streams)
     if setting in ("D", "E"):
         traces = with_capacity(traces, float(D.mean()))
-    activity = (F.churn_activity(cfg, rng)
-                if (p_exit or p_entry) else None)
+    if dynamics is None:
+        dynamics = "churn" if (p_exit or p_entry) else "static"
+    schedule = None
+    if dynamics == "churn" and (p_exit or p_entry):
+        # same rng position/stepping as the legacy churn_activity call;
+        # the engine mask derives from the schedule (single source of
+        # truth), so Scenario.activity stays None
+        schedule = churn_schedule(adj, scale.T, p_exit, p_entry, rng,
+                                  tau=scale.tau)
+    elif dynamics == "flap":
+        schedule = link_flap_schedule(adj, scale.T, rng, p_down=p_flap,
+                                      p_up=p_recover)
     return Scenario(key=dict(key or {}), cfg=cfg, traces=traces, adj=adj,
                     D=D, streams=streams, setting=setting,
                     error_model=error_model, gamma=gamma,
-                    activity=activity)
+                    schedule=schedule, replan=replan)
 
 
 def _estimated(sc: Scenario):
@@ -160,6 +184,14 @@ def _estimated(sc: Scenario):
         return (est.estimate_traces(sc.traces, L=5),
                 est.estimate_counts(sc.D, L=5))
     return sc.traces, sc.D
+
+
+def _plan_network(sc: Scenario):
+    """What the planner sees: the time-varying schedule when the point
+    replans on events, the static base graph otherwise."""
+    if sc.schedule is not None and sc.replan:
+        return sc.schedule
+    return sc.adj
 
 
 def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
@@ -171,6 +203,12 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
     sweep over a single network size is exactly one program). Greedy
     (discard-cost) scenarios emit sparse plans per point; capacity
     settings (D/E) get the streamed sparse repair afterwards.
+
+    Dynamics: points carrying a :class:`NetworkSchedule` plan against
+    it when ``replan`` is set (the solvers take schedules directly);
+    plan-once points plan on the base graph and the static plan is then
+    realized against the schedule — in-flight data over missing links
+    is lost to the discard vector (``mv.realize_plan``).
     """
     plans: list = [None] * len(scenarios)
     groups: dict[tuple, list[int]] = {}
@@ -180,7 +218,7 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
             plans[b] = mv.no_movement_plan(T_, n)
         elif sc.error_model == "discard":
             tr, _ = _estimated(sc)
-            plans[b] = mv.greedy_linear(tr, sc.adj)
+            plans[b] = mv.greedy_linear(tr, _plan_network(sc))
         else:
             groups.setdefault((T_, n, sc.error_model, sc.gamma),
                               []).append(b)
@@ -188,7 +226,7 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
         estimated = [_estimated(scenarios[b]) for b in idxs]
         trs = [tr for tr, _ in estimated]
         Ds = [D for _, D in estimated]
-        adjs = [scenarios[b].adj for b in idxs]
+        adjs = [_plan_network(scenarios[b]) for b in idxs]
         for b, p in zip(idxs, mv.solve_convex_batched(
                 trs, adjs, Ds, error_model=em, gamma=gamma, iters=iters,
                 seeds=seed)):
@@ -198,8 +236,10 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
             # setting E repairs on the ESTIMATED counts, like make_plan:
             # the imperfect-information planner never sees true volumes
             _, D_rep = _estimated(sc)
-            plans[b] = mv.repair_capacities(plans[b], sc.traces, sc.adj,
-                                            D_rep)
+            plans[b] = mv.repair_capacities(plans[b], sc.traces,
+                                            _plan_network(sc), D_rep)
+        if sc.schedule is not None and not sc.replan:
+            plans[b] = mv.realize_plan(plans[b], sc.schedule)
     return plans
 
 
@@ -229,6 +269,7 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
             hist = F.run_network_aware(sc.cfg, data, sc.traces, sc.adj,
                                        plan, streams=sc.streams,
                                        activity=sc.activity,
+                                       schedule=sc.schedule,
                                        engine=engine)
             out.update(acc=hist["test_acc"][-1],
                        acc_curve=hist["test_acc"],

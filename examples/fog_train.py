@@ -26,6 +26,15 @@ Engine / mesh knobs
 
 Programmatic callers can pass an explicit mesh:
 ``run_network_aware(..., engine="sharded", mesh=make_data_mesh(4))``.
+
+Network dynamics knobs
+----------------------
+``--churn 0.05`` runs the paper's §V-E entry/exit dynamics (p_exit =
+p_entry = 0.05) through the NetworkSchedule plane: planning replans on
+every event (the movement plane sees inactive endpoints), the engine
+stages the same active mask. ``--schedule flap`` flips links instead.
+``--plan-once`` freezes the plan on the base graph and realizes it
+against the schedule — data in flight over dead links is lost.
 """
 import argparse
 import json
@@ -39,9 +48,18 @@ if __name__ == "__main__":
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "scan", "sharded", "legacy"])
+    ap.add_argument("--schedule", default="static",
+                    choices=["static", "churn", "flap"])
+    ap.add_argument("--churn", type=float, default=0.0)
+    ap.add_argument("--plan-once", action="store_true")
     args = ap.parse_args()
     argv = ["--mode", "fog", "--model", "cnn", "--setting", args.setting,
-            "--costs", "testbed", "--engine", args.engine]
+            "--costs", "testbed", "--engine", args.engine,
+            "--schedule", args.schedule]
+    if args.churn:
+        argv += ["--churn", str(args.churn)]
+    if args.plan_once:
+        argv.append("--plan-once")
     if args.non_iid:
         argv.append("--non-iid")
     if args.full:

@@ -238,6 +238,13 @@ class AsyncEvaluator:
     device to host. The test set is pinned device-resident; submissions
     hold device arrays only, which keeps them donation-friendly for the
     surrounding engine programs.
+
+    Error handling: a failure while dispatching (trace/compile errors)
+    or while the device computation resolves is never swallowed — it is
+    deferred and re-raised, with the original exception chained, at the
+    next ``collect()``/``result()``/``shutdown()``. ``submit`` after a
+    deferred failure is a no-op so a sweep loop fails once, at the
+    synchronization point, instead of crashing mid-dispatch.
     """
 
     def __init__(self, apply_fn, x_te, y_te):
@@ -245,16 +252,44 @@ class AsyncEvaluator:
         self._x = _to_device_cached(x_te)
         self._y = _to_device_cached(y_te)
         self._pending: list = []
+        self._error: BaseException | None = None
 
     def submit(self, params) -> None:
-        self._pending.append(self._fn(params, self._x, self._y))
+        if self._error is not None:
+            return                      # surfaced at the next collect()
+        try:
+            self._pending.append(self._fn(params, self._x, self._y))
+        except Exception as e:          # dispatch/trace failure: defer
+            self._error = e
 
     def collect(self) -> tuple[list[float], list[float]]:
-        """Block once for everything submitted; returns (losses, accs)."""
-        losses = [float(tl) for tl, _ in self._pending]
-        accs = [float(ta) for _, ta in self._pending]
+        """Block once for everything submitted; returns (losses, accs).
+
+        Re-raises (chained) the first deferred dispatch or device-side
+        failure instead of returning partial results."""
+        err = self._error
+        losses, accs = [], []
+        for item in self._pending:
+            try:                        # device errors surface here
+                tl, ta = item
+                losses.append(float(tl))
+                accs.append(float(ta))
+            except Exception as e:
+                err = err or e
         self._pending = []
+        self._error = None
+        if err is not None:
+            raise RuntimeError(
+                "AsyncEvaluator: a submitted evaluation failed") from err
         return losses, accs
+
+    def result(self) -> tuple[list[float], list[float]]:
+        """Alias of :meth:`collect` (blocking result with propagation)."""
+        return self.collect()
+
+    def shutdown(self) -> None:
+        """Drain everything pending; re-raise any deferred failure."""
+        self.collect()
 
 
 @functools.lru_cache(maxsize=8)

@@ -31,7 +31,8 @@ from repro.core import movement as mv
 from repro.core.costs import CostTraces
 from repro.core.engine import (_stack, _sync, aggregate,  # noqa: F401
                                make_device_step, make_model)
-from repro.core.topology import ChurnProcess
+from repro.core.schedule import NetworkSchedule
+from repro.core.topology import churn_schedule
 from repro.data import pipeline as pl
 from repro.models import mnist as mm
 
@@ -55,10 +56,17 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                       adj: np.ndarray, plan: mv.MovementPlan,
                       streams: pl.FogStreams | None = None,
                       activity: np.ndarray | None = None,
-                      engine: str = "scan", mesh=None) -> dict:
+                      engine: str = "scan", mesh=None,
+                      schedule: NetworkSchedule | None = None) -> dict:
     """Train with a given movement plan. Returns history dict.
 
-    ``activity`` (T, n) bool — optional churn trace (§V-E); inactive
+    ``schedule`` — optional :class:`NetworkSchedule`: the per-round
+    active mask every engine stages (and the churn masking inside the
+    scan bodies) derives from ``schedule.activity()`` — one source of
+    truth shared with the movement plane that planned against the same
+    schedule. A constant schedule reproduces the static path bitwise.
+    ``activity`` (T, n) bool — explicit churn trace (§V-E); overrides
+    the schedule's mask when both are given (legacy path); inactive
     devices collect nothing, don't train, and miss aggregations.
     ``engine`` — "scan" (one compiled lax.scan over all rounds),
     "sharded" (the scan partitioned across a "data" device mesh via
@@ -81,11 +89,18 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     if streams is None:
         streams = pl.poisson_streams(cfg.n, cfg.T, y_tr, iid=cfg.iid,
                                      rng=rng)
+    if schedule is not None:
+        if (schedule.T, schedule.n) != (cfg.T, cfg.n):
+            raise ValueError(
+                f"schedule is (T={schedule.T}, n={schedule.n}) but the "
+                f"run is (T={cfg.T}, n={cfg.n})")
+        if activity is None:
+            activity = schedule.activity()
     if activity is not None:
-        for t in range(cfg.T):
-            for i in range(cfg.n):
-                if not activity[t, i]:
-                    streams.collected[t][i] = np.empty(0, np.int64)
+        # inactive devices collect nothing (no-op for all-active masks,
+        # e.g. a constant schedule)
+        for t, i in zip(*np.nonzero(~np.asarray(activity, bool))):
+            streams.collected[t][i] = np.empty(0, np.int64)
     processed = pl.apply_movement(streams, plan, rng)
     max_pts = pl.pad_size(processed, cfg.max_points)
 
@@ -166,10 +181,10 @@ def run_federated(cfg: FedConfig, data, **kw) -> dict:
 
 
 def churn_activity(cfg: FedConfig, rng: np.random.Generator) -> np.ndarray:
-    proc = ChurnProcess(cfg.n, cfg.p_exit, cfg.p_entry, rng)
-    rows = []
-    for t in range(cfg.T):
-        rows.append(proc.step())
-        if (t + 1) % cfg.tau == 0:
-            proc.sync()
-    return np.stack(rows)
+    """Legacy (T, n) churn trace — now just the active mask of the
+    ChurnProcess-produced :class:`NetworkSchedule` (identical rng
+    stepping), so the engine masking and the movement plane share one
+    producer."""
+    sched = churn_schedule(np.ones((cfg.n, cfg.n), bool), cfg.T,
+                           cfg.p_exit, cfg.p_entry, rng, tau=cfg.tau)
+    return sched.activity()

@@ -24,6 +24,16 @@ Solvers:
   as quadratic hinge penalties.
 * ``theorem4_closed_form`` — hierarchical-topology closed form (Thm 4).
 
+Every solver takes the network as either a static ``adj`` matrix, a
+(T, n, n) stack, or a :class:`repro.core.schedule.NetworkSchedule`
+(the :func:`repro.core.schedule.as_schedule` adapter makes the three
+interchangeable; static-``adj`` call sites are bitwise identical to the
+pre-schedule paths, and a constant schedule never materializes the
+(T, n, n) adjacency). ``realize_plan`` confronts a plan with the
+network that actually happened: transfers over links absent at their
+round (down, or an endpoint churned out) are lost in transit — the
+plan-once baseline of the dynamics bench.
+
 All solvers return a :class:`MovementPlan`. Its core is SPARSE: a
 COO-style edge list ``(t, src, dst, qty)`` holding only realized
 transfers — the fog setting is large-n and the plans the solvers emit
@@ -46,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costs import CostTraces
+from repro.core.schedule import as_schedule
 
 
 @dataclasses.dataclass
@@ -190,14 +201,30 @@ class MovementPlan:
                   qe[arrive] * D[te[arrive], se[arrive]])
         return G
 
-    def check(self, adj: np.ndarray, atol: float = 1e-5):
+    def check(self, adj, atol: float = 1e-5):
+        """Validate nonnegativity, conservation (eq. 8) and graph
+        support (eq. 7). ``adj`` may be a static (n, n) matrix, a
+        (T, n, n) stack or a NetworkSchedule — every offload edge is
+        validated against the adjacency of ITS round, so plans that
+        follow a time-varying network validate correctly (a single
+        static matrix describes only one round and wrongly rejects
+        plans that were valid round-by-round)."""
         T, n = self.r.shape
-        assert np.all(self.s >= -atol) and np.all(self.r >= -atol)
-        total = self.r + self.s.sum(axis=2)
+        sched = as_schedule(adj, T)
+        e = self.edges
+        assert np.all(e.qty >= -atol) and np.all(self.r >= -atol)
+        total = self.r.copy()
+        np.add.at(total, (e.t, e.src), e.qty)
         assert np.allclose(total, 1.0, atol=1e-4), total
-        offdiag = self.s * (1 - np.eye(n))[None]
-        adj_t = adj if adj.ndim == 3 else np.broadcast_to(adj, (T, n, n))
-        assert np.all(offdiag[~adj_t] <= atol), "offload over missing link"
+        for t in range(T):
+            src, dst, qty = self.round_edges(t)
+            off = src != dst
+            if not off.any():
+                continue
+            a = np.asarray(sched.adj_at(t), bool)
+            lost = qty[off] * ~a[src[off], dst[off]]
+            assert np.all(lost <= atol), \
+                f"offload over missing link at round {t}"
 
 
 def no_movement_plan(T: int, n: int) -> MovementPlan:
@@ -208,8 +235,11 @@ def no_movement_plan(T: int, n: int) -> MovementPlan:
     return MovementPlan(r=np.zeros((T, n)), edges=edges, n=n)
 
 
-def _adj_t(adj: np.ndarray, T: int) -> np.ndarray:
-    return adj if adj.ndim == 3 else np.broadcast_to(adj, (T, *adj.shape))
+def _adj_t(adj, T: int) -> np.ndarray:
+    """(T, n, n) adjacency view for the dense oracles — a broadcast view
+    (no copy) for static matrices / constant schedules, materialized for
+    genuinely time-varying schedules."""
+    return as_schedule(adj, T).adj_view()
 
 
 # ---------------------------------------------------------------------------
@@ -237,36 +267,44 @@ def _plan_from_choice(choice: np.ndarray, k: np.ndarray) -> MovementPlan:
     return MovementPlan(r=r, edges=edges, n=n)
 
 
-def greedy_linear(traces: CostTraces, adj: np.ndarray, *,
+def greedy_linear(traces: CostTraces, adj, *,
                   backend: str = "auto") -> MovementPlan:
     """Theorem 3 rule as one batched min-plus over all T rounds.
+
+    ``adj``: static (n, n) matrix, (T, n, n) stack or NetworkSchedule —
+    with a time-varying schedule each round's decision uses the
+    adjacency of THAT round, i.e. the plan replans on every network
+    event for free (churn-masked schedules stop offloading to exited
+    nodes; flapped links drop out of the candidate set).
 
     backend: "numpy" (vectorized, default), "jnp" / "pallas" (device
     batched kernel via ``kernels.ops.greedy_decision_batched``), or
     "auto" (pallas on accelerators when n ≥ PALLAS_MIN_N and tileable).
     """
     T, n = traces.c_node.shape
+    sched = as_schedule(adj, T)
     if backend == "auto":
         backend = ("pallas" if jax.default_backend() != "cpu"
                    and n >= PALLAS_MIN_N and n % 128 == 0 else "numpy")
     if backend in ("jnp", "pallas"):
-        return _greedy_linear_device(traces, adj,
+        return _greedy_linear_device(traces, sched,
                                      use_pallas=backend == "pallas")
     # row-vectorized min-plus with a single reused (n, n) buffer: never
     # materializes the (T, n, n) effective-cost tensor (fresh-page writes
     # dominate wall time at fog scale), and the buffer stays cache-hot
+    static = sched.static_adj
     c_next = np.concatenate([traces.c_node[1:], traces.c_node[-1:]])
     dg = np.arange(n)
     eye = np.eye(n, dtype=bool)
-    invalid = None if adj.ndim == 3 else ~adj | eye
-    inv_buf = np.empty((n, n), bool) if adj.ndim == 3 else None
+    invalid = None if static is None else ~static | eye
+    inv_buf = np.empty((n, n), bool) if static is None else None
     k = np.zeros((T, n), np.int64)
     off_cost = np.full((T, n), np.inf)   # T-1: no off-horizon offloading
     buf = np.empty((n, n))
     for t in range(T - 1):
         np.add(traces.c_link[t], c_next[t][None, :], out=buf)
         if invalid is None:              # time-varying graph, reuse bufs
-            np.logical_not(adj[t], out=inv_buf)
+            np.logical_not(sched.adj_at(t), out=inv_buf)
             np.logical_or(inv_buf, eye, out=inv_buf)
             buf[inv_buf] = np.inf
         else:
@@ -278,12 +316,12 @@ def greedy_linear(traces: CostTraces, adj: np.ndarray, *,
     return _plan_from_choice(choice, k)
 
 
-def _greedy_linear_device(traces: CostTraces, adj: np.ndarray, *,
+def _greedy_linear_device(traces: CostTraces, adj, *,
                           use_pallas: bool) -> MovementPlan:
     from repro.kernels import ops
 
     T, n = traces.c_node.shape
-    adj3 = _adj_t(adj, T).copy()
+    adj3 = np.array(_adj_t(adj, T), dtype=bool)   # kernel-side copy
     adj3[T - 1] = False    # no off-horizon offloading in the final round
     c_next = np.concatenate([traces.c_node[1:], traces.c_node[-1:]])
     # device-side COO emission: fixed-shape (T·n,) edge arrays from the
@@ -304,7 +342,7 @@ def _greedy_linear_device(traces: CostTraces, adj: np.ndarray, *,
     return MovementPlan(r=r, edges=edges, n=n)
 
 
-def greedy_linear_scalar(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
+def greedy_linear_scalar(traces: CostTraces, adj) -> MovementPlan:
     """Textbook pure-Python nested-loop Theorem-3 rule: one interpreter
     iteration per (t, i, j). The interpreter-bound baseline the batched
     min-plus replaces — benchmark reference only."""
@@ -333,7 +371,7 @@ def greedy_linear_scalar(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
     return MovementPlan(s=s, r=r)
 
 
-def greedy_linear_loop(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
+def greedy_linear_loop(traces: CostTraces, adj) -> MovementPlan:
     """Original per-round Python loop — kept as the oracle for the
     vectorized path and the baseline in the engine_throughput bench."""
     T, n = traces.c_node.shape
@@ -362,17 +400,17 @@ def greedy_linear_loop(traces: CostTraces, adj: np.ndarray) -> MovementPlan:
     return MovementPlan(s=s, r=r)
 
 
-def _repair_round(s_t, r_t, prev, t, T, adj3, traces, D, diag_next,
+def _repair_round(s_t, r_t, prev, t, T, adj_t, traces, D, diag_next,
                   dg, eye):
     """Repair one round in place on the dense (n, n) buffer ``s_t``.
 
     Exactly the arithmetic of the dense vectorized repair (which is
     bitwise-equal to ``repair_capacities_loop``): vectorized violation
     detection, scalar replay of spill events in the oracle's order.
-    ``prev`` is round t−1 post-repair (None at t=0); ``diag_next`` is
-    the PRE-repair s_ii of round t+1 (rounds ahead are untouched when
-    round t is repaired, so the original plan diagonal is the oracle
-    value)."""
+    ``adj_t`` is round t's (n, n) adjacency; ``prev`` is round t−1
+    post-repair (None at t=0); ``diag_next`` is the PRE-repair s_ii of
+    round t+1 (rounds ahead are untouched when round t is repaired, so
+    the original plan diagonal is the oracle value)."""
     n = s_t.shape[0]
     Dt = D[t]
     Dt_safe = np.maximum(Dt, 1e-12)
@@ -383,7 +421,7 @@ def _repair_round(s_t, r_t, prev, t, T, adj3, traces, D, diag_next,
     else:
         arrivals = np.zeros(n)
     # (1) link capacity
-    viol = (adj3[t] & ~eye) & (s_t * Dt[:, None] > traces.cap_link[t])
+    viol = (adj_t & ~eye) & (s_t * Dt[:, None] > traces.cap_link[t])
     if viol.any():
         spill_ij = np.where(
             viol, s_t - traces.cap_link[t] / Dt_safe[:, None], 0.0)
@@ -422,7 +460,7 @@ def _repair_round(s_t, r_t, prev, t, T, adj3, traces, D, diag_next,
 
 
 def repair_capacities(plan: MovementPlan, traces: CostTraces,
-                      adj: np.ndarray, D: np.ndarray) -> MovementPlan:
+                      adj, D: np.ndarray) -> MovementPlan:
     """Local repair of capacity violations (Theorem 6 guidance).
 
     Forward pass over t (sequential — arrivals chain rounds together),
@@ -430,12 +468,14 @@ def repair_capacities(plan: MovementPlan, traces: CostTraces,
     two reused dense (n, n) scratch buffers (current round + previous
     round for arrivals), repaired with the vectorized-detection /
     scalar-replay rule of :func:`_repair_round`, and re-compressed to
-    edges. Never materializes the (T, n, n) tensor, yet remains
-    bitwise-equal to ``repair_capacities_dense`` and
-    ``repair_capacities_loop`` (fractional convex plans included).
+    edges. ``adj`` may be a static matrix, a (T, n, n) stack or a
+    NetworkSchedule (per-round adjacency, no (T, n, n) materialization
+    for constant/event schedules). Never materializes the (T, n, n)
+    tensor, yet remains bitwise-equal to ``repair_capacities_dense``
+    and ``repair_capacities_loop`` (fractional convex plans included).
     """
     T, n = plan.r.shape
-    adj3 = _adj_t(adj, T)
+    sched = as_schedule(adj, T)
     r = plan.r.copy()
     dg = np.arange(n)
     eye = np.eye(n, dtype=bool)
@@ -445,9 +485,9 @@ def repair_capacities(plan: MovementPlan, traces: CostTraces,
     ts, srcs, dsts, qtys = [], [], [], []
     for t in range(T):
         plan.round_dense(t, out=cur)
-        _repair_round(cur, r[t], prev if t > 0 else None, t, T, adj3,
-                      traces, D, diag0[t + 1] if t + 1 < T else None,
-                      dg, eye)
+        _repair_round(cur, r[t], prev if t > 0 else None, t, T,
+                      sched.adj_at(t), traces, D,
+                      diag0[t + 1] if t + 1 < T else None, dg, eye)
         ii, jj = np.nonzero(cur)
         ts.append(np.full(len(ii), t, np.int64))
         srcs.append(ii.astype(np.int64))
@@ -460,7 +500,7 @@ def repair_capacities(plan: MovementPlan, traces: CostTraces,
 
 
 def repair_capacities_dense(plan: MovementPlan, traces: CostTraces,
-                            adj: np.ndarray, D: np.ndarray) -> MovementPlan:
+                            adj, D: np.ndarray) -> MovementPlan:
     """Dense-tensor repair (the pre-sparse vectorized path) — preserved
     as the oracle/baseline for the streamed sparse ``repair_capacities``
     and the ``movement_scale`` benchmark."""
@@ -471,9 +511,9 @@ def repair_capacities_dense(plan: MovementPlan, traces: CostTraces,
     dg = np.arange(n)
     eye = np.eye(n, dtype=bool)
     for t in range(T):
-        _repair_round(s[t], r[t], s[t - 1] if t > 0 else None, t, T, adj3,
-                      traces, D, s[t + 1][dg, dg] if t + 1 < T else None,
-                      dg, eye)
+        _repair_round(s[t], r[t], s[t - 1] if t > 0 else None, t, T,
+                      adj3[t], traces, D,
+                      s[t + 1][dg, dg] if t + 1 < T else None, dg, eye)
     return MovementPlan(s=s, r=r)
 
 
@@ -489,7 +529,7 @@ def _revert(s_t, r_t, t, i, spill, traces, Dt, arrivals):
 
 
 def repair_capacities_loop(plan: MovementPlan, traces: CostTraces,
-                           adj: np.ndarray, D: np.ndarray) -> MovementPlan:
+                           adj, D: np.ndarray) -> MovementPlan:
     """Original per-(i, j) Python-loop repair — oracle for the
     vectorized path."""
     T, n = plan.r.shape
@@ -537,11 +577,192 @@ def repair_capacities_loop(plan: MovementPlan, traces: CostTraces,
 
 
 # ---------------------------------------------------------------------------
+# Plan realization + edge-native repair under time-varying networks
+# ---------------------------------------------------------------------------
+
+
+def realize_plan(plan: MovementPlan, schedule) -> MovementPlan:
+    """Confront a plan with the network that actually materialized.
+
+    Offload edges whose link is absent at their round — flapped down,
+    or an endpoint churned out under a masked schedule — lose their
+    data in transit: the share moves to the discard vector (the data
+    plane never delivers it, so its cost is the discard error, not a
+    transfer). A plan solved against the schedule itself passes through
+    unchanged; this is the "plan-once" baseline of the
+    ``network_dynamics`` bench, quantifying what ignoring dynamics
+    costs."""
+    T, n = plan.r.shape
+    sched = as_schedule(schedule, T)
+    e = plan.edges
+    keep = np.ones(len(e), bool)
+    r = plan.r.copy()
+    sp = plan._round_splits()
+    for t in range(T):
+        sl = slice(sp[t], sp[t + 1])
+        src, dst, qty = e.src[sl], e.dst[sl], e.qty[sl]
+        off = src != dst
+        if not off.any():
+            continue
+        a = np.asarray(sched.adj_at(t), bool)
+        lost = off & ~a[src, dst]
+        if lost.any():
+            np.add.at(r[t], src[lost], qty[lost])
+            keep[np.arange(sp[t], sp[t + 1])[lost]] = False
+    edges = PlanEdges(t=e.t[keep], src=e.src[keep], dst=e.dst[keep],
+                      qty=e.qty[keep])
+    return MovementPlan(r=r, edges=edges, n=n)
+
+
+def repair_capacities_edges(plan: MovementPlan, traces: CostTraces,
+                            adj, D: np.ndarray, *,
+                            k: int = 4) -> MovementPlan:
+    """Edge-native capacity repair with next-best offload fallbacks.
+
+    Streams the sparse plan round by round as (src, dst, qty) edge
+    dicts plus O(n) aggregates — no dense per-round (n, n) scratch is
+    ever rebuilt. Violation handling differs from the Theorem-6 oracle
+    rule (:func:`repair_capacities` / ``repair_capacities_dense``) in
+    one way: when a transfer overruns a link or receiver capacity, the
+    spilled share first tries the source's next-cheapest feasible
+    neighbors — the k-best min-plus candidates from
+    ``kernels.ops.topk_neighbors`` — respecting both link and receiver
+    headroom, before falling back to the oracle's local-process /
+    discard rule. Saturated-but-connected networks therefore keep more
+    data in play instead of discarding it. Feasible plans pass through
+    bitwise unchanged.
+    """
+    T, n = plan.r.shape
+    sched = as_schedule(adj, T)
+    kk = max(1, min(k, n - 1))
+    topk: tuple | None = None
+
+    def _topk():
+        """k-best min-plus candidates, solved LAZILY on the first spill:
+        feasible plans pass through without paying the device transfer
+        or the top-k program (c_link is (T, n, n) dense in CostTraces
+        already, so the batched solve adds no asymptotic memory)."""
+        nonlocal topk
+        if topk is None:
+            from repro.kernels import ops
+
+            c_next = np.concatenate([traces.c_node[1:],
+                                     traces.c_node[-1:]])
+            cc, cd = ops.topk_neighbors(
+                jnp.asarray(traces.c_link, jnp.float32),
+                jnp.asarray(c_next, jnp.float32),
+                jnp.asarray(sched.adj_view()), k=kk)
+            topk = (np.asarray(cc), np.asarray(cd))
+        return topk
+
+    diag0 = plan.diag()                  # pre-repair s_ii one round ahead
+    r = plan.r.copy()
+    arrivals = np.zeros(n)
+    ts, srcs, dsts, qtys = [], [], [], []
+    for t in range(T):
+        src, dst, qty = plan.round_edges(t)
+        share: dict[tuple[int, int], float] = {}
+        for i, j, q in zip(src, dst, qty):
+            share[(int(i), int(j))] = share.get((int(i), int(j)), 0.0) \
+                + float(q)
+        Dt = D[t]
+        cap_link_t = traces.cap_link[t]
+        local_next = diag0[t + 1] * D[t + 1] if t + 1 < T else None
+        inc = np.zeros(n)
+        for (i, j), q in share.items():
+            if i != j:
+                inc[j] += q * Dt[i]
+
+        def _place(i, frac):
+            """Route a spilled fraction of D_i(t): next-best neighbors
+            (link + receiver headroom), then local, then discard."""
+            if t + 1 < T:
+                cand_cost, cand = _topk()
+                for c in range(kk):
+                    if frac <= 1e-12:
+                        return
+                    cost = cand_cost[t, i, c]
+                    if not np.isfinite(cost):
+                        break            # ascending order: rest invalid
+                    j2 = int(cand[t, i, c])
+                    cur_q = share.get((i, j2), 0.0)
+                    head = min(
+                        cap_link_t[i, j2] - cur_q * Dt[i],
+                        traces.cap_node[t + 1, j2] - local_next[j2]
+                        - inc[j2])
+                    put = min(frac, head / max(Dt[i], 1e-12))
+                    if put <= 1e-12:
+                        continue
+                    share[(i, j2)] = cur_q + put
+                    inc[j2] += put * Dt[i]
+                    frac -= put
+            if frac > 1e-12:             # oracle fallback (_revert rule)
+                cap_left = traces.cap_node[t, i] - (
+                    share.get((i, i), 0.0) * Dt[i] + arrivals[i])
+                if (traces.c_node[t, i] <= traces.f_err[t, i]
+                        and cap_left >= frac * Dt[i]):
+                    share[(i, i)] = share.get((i, i), 0.0) + frac
+                else:
+                    r[t, i] += frac
+
+        # (1) link capacities (snapshot the keys; re-read quantities —
+        # _place may have grown an edge processed later in the sweep)
+        for i, j in sorted(k_ for k_ in share if k_[0] != k_[1]):
+            q = share[(i, j)]
+            if q > 0.0 and q * Dt[i] > cap_link_t[i, j]:
+                spill = q - cap_link_t[i, j] / max(Dt[i], 1e-12)
+                share[(i, j)] = q - spill
+                inc[j] -= spill * Dt[i]
+                _place(i, spill)
+        # (2) receiver node capacities at t+1 (arrivals processed then)
+        if t + 1 < T:
+            for j in range(n):
+                excess = inc[j] + local_next[j] - traces.cap_node[t + 1, j]
+                if excess <= 1e-9:
+                    continue
+                for i, j_ in sorted(k_ for k_ in share
+                                    if k_[1] == j and k_[0] != j):
+                    if excess <= 1e-12:
+                        break
+                    q = share[(i, j)]
+                    if q <= 0.0:
+                        continue
+                    cut = min(q * Dt[i], excess)
+                    spill = cut / max(Dt[i], 1e-12)
+                    share[(i, j)] = q - spill
+                    inc[j] -= cut
+                    excess -= cut
+                    _place(i, spill)
+        # (3) own node capacity at t for s_ii
+        for i in range(n):
+            loc = share.get((i, i), 0.0)
+            over = loc * Dt[i] + arrivals[i] - traces.cap_node[t, i]
+            if over > 1e-9:
+                cut = min(loc * Dt[i], max(over, 0.0))
+                spill = cut / max(Dt[i], 1e-12)
+                share[(i, i)] = loc - spill
+                r[t, i] += spill
+
+        arrivals[:] = 0.0                # repaired round feeds t+1
+        for (i, j), q in share.items():
+            if i != j and q > 0.0:
+                arrivals[j] += q * Dt[i]
+        items = sorted((ij, q) for ij, q in share.items() if q > 0.0)
+        ts.append(np.full(len(items), t, np.int64))
+        srcs.append(np.array([ij[0] for ij, _ in items], np.int64))
+        dsts.append(np.array([ij[1] for ij, _ in items], np.int64))
+        qtys.append(np.array([q for _, q in items], np.float64))
+    edges = PlanEdges(t=np.concatenate(ts), src=np.concatenate(srcs),
+                      dst=np.concatenate(dsts), qty=np.concatenate(qtys))
+    return MovementPlan(r=r, edges=edges, n=n)
+
+
+# ---------------------------------------------------------------------------
 # General convex solver (1/sqrt error cost, Lemma 1)
 # ---------------------------------------------------------------------------
 
 
-def _convex_mask(traces: CostTraces, adj: np.ndarray) -> np.ndarray:
+def _convex_mask(traces: CostTraces, adj) -> np.ndarray:
     """Support mask over the [s_ij | r_i] softmax parametrization."""
     T, n = traces.c_node.shape
     adj3 = _adj_t(adj, T)
@@ -618,7 +839,7 @@ def _convex_run(c_node, c_link, f_err, cap_node, cap_link, mask, D, z0, *,
     return core(c_node, c_link, f_err, cap_node, cap_link, mask, D, z0)
 
 
-def _convex_inputs(traces: CostTraces, adj: np.ndarray, D: np.ndarray):
+def _convex_inputs(traces: CostTraces, adj, D: np.ndarray):
     return (jnp.asarray(traces.c_node), jnp.asarray(traces.c_link),
             jnp.asarray(traces.f_err),
             jnp.asarray(np.minimum(traces.cap_node, 1e12)),
@@ -627,7 +848,7 @@ def _convex_inputs(traces: CostTraces, adj: np.ndarray, D: np.ndarray):
             jnp.asarray(D, jnp.float32))
 
 
-def solve_convex(traces: CostTraces, adj: np.ndarray, D: np.ndarray, *,
+def solve_convex(traces: CostTraces, adj, D: np.ndarray, *,
                  error_model: str = "sqrt", gamma: float = 1.0,
                  iters: int = 800, lr: float = 0.05,
                  capacity_penalty: float = 50.0,
@@ -635,6 +856,8 @@ def solve_convex(traces: CostTraces, adj: np.ndarray, D: np.ndarray, *,
     """Masked-softmax parametrization of [s | r] + Adam (pure JAX).
 
     error_model: "sqrt" (f·γ/√G), "neg_G" (−f·G), "discard" (f·D·r).
+    ``adj`` may be a static matrix, a (T, n, n) stack or a
+    NetworkSchedule (the support mask then varies per round).
     """
     T, n = traces.c_node.shape
     z0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (T, n, n + 1))

@@ -1,0 +1,267 @@
+"""Time-varying network plane (paper §V-E; ROADMAP "time-varying
+topologies in the Scenario layer").
+
+A :class:`NetworkSchedule` is the per-round view of the fog network that
+every layer consumes: adjacency, active-device mask and entry/exit /
+link events. Four storage modes keep a constant network O(n²) — a
+constant schedule NEVER materializes the (T, n, n) tensor:
+
+* **constant** — one (n, n) base adjacency shared by every round
+  (``adj_at(t)`` returns the base array itself, so static-``adj`` call
+  sites that are adapted through :func:`as_schedule` stay bitwise
+  identical to passing the raw matrix);
+* **full** — an explicit (T, n, n) stack (``adj_at(t)`` is ``arr[t]``,
+  matching the pre-schedule time-varying ndarray path bit for bit);
+* **events** — piecewise-constant: base adjacency + a sorted link-event
+  list, replayed through a cursor into one reused (n, n) buffer
+  (sequential sweeps over t cost O(E + T), random access restarts from
+  the base);
+* **masked** — base adjacency + a (T, n) active trace with
+  ``mask_inactive=True``: ``adj_at(t)`` is ``base & active⊗active``
+  computed into one reused buffer, which is how node entry/exit
+  (``topology.churn_schedule``) makes the movement plane see churn —
+  plans stop routing data over links whose endpoint has left.
+
+The active mask is always dense (T, n) — O(T·n), never a problem.
+Entry/exit and link events are derived lazily for ``events_in``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_KINDS = ("entry", "exit", "link_up", "link_down")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class NetEvent:
+    """One network change, effective from round ``t`` onward.
+
+    ``node`` is the (source) device; ``peer`` is the link destination
+    for link events and -1 for node entry/exit."""
+
+    t: int
+    kind: str
+    node: int
+    peer: int = -1
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown event kind {self.kind!r}")
+        if self.kind.startswith("link") and self.peer < 0:
+            raise ValueError("link events require a peer")
+
+
+class NetworkSchedule:
+    """Per-round adjacency + active mask + events (see module doc)."""
+
+    def __init__(self, T: int, n: int, *, base_adj=None, adj_full=None,
+                 link_events=(), active=None, mask_inactive=False,
+                 initial_active=None):
+        self.T, self.n = int(T), int(n)
+        if self.T <= 0 or self.n <= 0:
+            raise ValueError("NetworkSchedule requires T > 0 and n > 0")
+        self._base = base_adj
+        self._full = adj_full
+        self._link_events = sorted(link_events)
+        self._active = active
+        self._mask = bool(mask_inactive)
+        self._initial_active = initial_active
+        if self._full is None and self._base is None:
+            raise TypeError("NetworkSchedule requires base_adj or adj_full")
+        if self._full is not None and self._full.shape != (self.T, n, n):
+            raise ValueError(f"adj_full shape {self._full.shape} != "
+                             f"{(self.T, n, n)}")
+        if self._base is not None and self._base.shape != (n, n):
+            raise ValueError(f"base_adj shape {self._base.shape} != {(n, n)}")
+        if self._active is not None and self._active.shape != (self.T, n):
+            raise ValueError(f"active shape {self._active.shape} != "
+                             f"{(self.T, n)}")
+        for e in self._link_events:
+            if not 0 <= e.t < self.T:
+                raise ValueError(f"event round {e.t} outside horizon")
+        # event-replay cursor (events mode) / mask scratch (masked mode)
+        self._cur: np.ndarray | None = None
+        self._cur_ptr = 0
+        self._mask_buf: np.ndarray | None = None
+        self._ones_row: np.ndarray | None = None
+        self._events_cache: list[NetEvent] | None = None
+
+    # -- constructors ---------------------------------------------------
+
+    @classmethod
+    def constant(cls, adj, T: int, *, active=None) -> "NetworkSchedule":
+        """Static network: the adjacency object is kept as-is (no copy),
+        so consumers adapted through ``as_schedule`` read the very same
+        array a raw static-``adj`` call site would."""
+        adj = np.asarray(adj)
+        return cls(T, adj.shape[0], base_adj=adj, active=active)
+
+    @classmethod
+    def full(cls, adj_full, *, active=None) -> "NetworkSchedule":
+        """Explicit (T, n, n) stack (the pre-schedule time-varying
+        representation; O(T·n²) — caller's choice)."""
+        adj_full = np.asarray(adj_full)
+        return cls(adj_full.shape[0], adj_full.shape[1], adj_full=adj_full,
+                   active=active)
+
+    @classmethod
+    def from_events(cls, base_adj, T: int, events, *,
+                    active=None) -> "NetworkSchedule":
+        """Piecewise-constant from a link-event list (each event flips
+        one directed link from its round onward)."""
+        base_adj = np.asarray(base_adj, bool)
+        return cls(T, base_adj.shape[0], base_adj=base_adj,
+                   link_events=tuple(events), active=active)
+
+    @classmethod
+    def masked(cls, base_adj, active, *,
+               initial_active=None) -> "NetworkSchedule":
+        """Node entry/exit: per-round adjacency is the base with every
+        link touching an inactive endpoint removed. ``initial_active``
+        (default: ``active[0]``) anchors the t=0 entry/exit events."""
+        base_adj = np.asarray(base_adj, bool)
+        active = np.asarray(active, bool)
+        return cls(active.shape[0], base_adj.shape[0], base_adj=base_adj,
+                   active=active, mask_inactive=True,
+                   initial_active=initial_active)
+
+    # -- accessors ------------------------------------------------------
+
+    @property
+    def static_adj(self) -> np.ndarray | None:
+        """The single (n, n) adjacency if it never changes, else None —
+        the fast-path discriminator for movement solvers."""
+        if self._full is not None or self._link_events:
+            return None
+        if self._mask and self._active is not None \
+                and not self._active.all():
+            return None
+        return self._base
+
+    def adj_at(self, t: int) -> np.ndarray:
+        """(n, n) adjacency of round t. Constant/full modes return the
+        stored array (a view — treat as read-only); events/masked modes
+        return a reused scratch buffer valid until the next call."""
+        if not 0 <= t < self.T:
+            raise IndexError(f"round {t} outside horizon [0, {self.T})")
+        if self._full is not None:
+            return self._full[t]
+        if self._link_events:
+            return self._replay(t)
+        if self._mask and self._active is not None:
+            row = self._active[t]
+            if row.all():
+                return self._base
+            if self._mask_buf is None:
+                self._mask_buf = np.empty((self.n, self.n), bool)
+            np.logical_and(self._base, row[:, None], out=self._mask_buf)
+            np.logical_and(self._mask_buf, row[None, :],
+                           out=self._mask_buf)
+            return self._mask_buf
+        return self._base
+
+    def _replay(self, t: int) -> np.ndarray:
+        ev = self._link_events
+        if self._cur is None or (self._cur_ptr > 0
+                                 and ev[self._cur_ptr - 1].t > t):
+            self._cur = np.array(self._base, dtype=bool, copy=True)
+            self._cur_ptr = 0
+        while self._cur_ptr < len(ev) and ev[self._cur_ptr].t <= t:
+            e = ev[self._cur_ptr]
+            self._cur[e.node, e.peer] = e.kind == "link_up"
+            self._cur_ptr += 1
+        return self._cur
+
+    def active_at(self, t: int) -> np.ndarray:
+        """(n,) active mask of round t (read-only view)."""
+        if not 0 <= t < self.T:
+            raise IndexError(f"round {t} outside horizon [0, {self.T})")
+        if self._active is not None:
+            return self._active[t]
+        if self._ones_row is None:
+            self._ones_row = np.ones(self.n, bool)
+        return self._ones_row
+
+    def activity(self) -> np.ndarray:
+        """The dense (T, n) active trace — what the engines stage as the
+        per-round churn mask (one source of truth)."""
+        if self._active is not None:
+            return self._active.copy()
+        return np.ones((self.T, self.n), bool)
+
+    def events_in(self, t0: int, t1: int) -> list[NetEvent]:
+        """All events with t0 <= t < t1, sorted. Entry/exit events come
+        from active-trace transitions; link events from the event list
+        (events mode) or adjacent-round diffs (full mode — O(T·n²)
+        compute on first use, cached)."""
+        if self._events_cache is None:
+            self._events_cache = self._build_events()
+        return [e for e in self._events_cache if t0 <= e.t < t1]
+
+    def _build_events(self) -> list[NetEvent]:
+        evs = list(self._link_events)
+        if self._full is not None:
+            for t in range(1, self.T):
+                prev = np.asarray(self._full[t - 1], bool)
+                cur = np.asarray(self._full[t], bool)
+                for i, j in zip(*np.nonzero(cur & ~prev)):
+                    evs.append(NetEvent(t, "link_up", int(i), int(j)))
+                for i, j in zip(*np.nonzero(prev & ~cur)):
+                    evs.append(NetEvent(t, "link_down", int(i), int(j)))
+        if self._active is not None:
+            prev = (self._active[0] if self._initial_active is None
+                    else np.asarray(self._initial_active, bool))
+            for t in range(self.T):
+                row = self._active[t]
+                for i in np.nonzero(row & ~prev)[0]:
+                    evs.append(NetEvent(t, "entry", int(i)))
+                for i in np.nonzero(prev & ~row)[0]:
+                    evs.append(NetEvent(t, "exit", int(i)))
+                prev = row
+        return sorted(evs)
+
+    # -- dense views (oracles / device kernels only) --------------------
+
+    def adj_view(self) -> np.ndarray:
+        """(T, n, n) adjacency. Constant schedules return a broadcast
+        VIEW (no O(T·n²) pages — exactly what the pre-schedule
+        ``_adj_t`` adapter produced); time-varying schedules materialize.
+        For dense oracles, the convex mask and device kernels only."""
+        if self._full is not None:
+            return self._full
+        static = self.static_adj
+        if static is not None:
+            return np.broadcast_to(static, (self.T, *static.shape))
+        return np.stack([np.array(self.adj_at(t), dtype=bool, copy=True)
+                         for t in range(self.T)])
+
+    def __repr__(self) -> str:
+        mode = ("full" if self._full is not None else
+                "events" if self._link_events else
+                "masked" if self._mask else "constant")
+        return (f"NetworkSchedule(T={self.T}, n={self.n}, mode={mode}, "
+                f"events={len(self._link_events)}, "
+                f"active={'all' if self._active is None else 'trace'})")
+
+
+def as_schedule(adj, T: int) -> NetworkSchedule:
+    """Adapter: accept a NetworkSchedule, a static (n, n) matrix or a
+    (T, n, n) stack. Static matrices wrap WITHOUT copying, so adapted
+    consumers stay bitwise identical to the pre-schedule code paths."""
+    if isinstance(adj, NetworkSchedule):
+        if adj.T != T:
+            raise ValueError(f"schedule horizon T={adj.T} does not match "
+                             f"the caller's T={T}")
+        return adj
+    a = np.asarray(adj)
+    if a.ndim == 2:
+        return NetworkSchedule.constant(a, T)
+    if a.ndim == 3:
+        if a.shape[0] != T:
+            raise ValueError(f"(T, n, n) adjacency has T={a.shape[0]}, "
+                             f"caller expects T={T}")
+        return NetworkSchedule.full(a)
+    raise TypeError(f"cannot interpret {type(adj).__name__} of ndim "
+                    f"{a.ndim} as a network schedule")

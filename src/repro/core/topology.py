@@ -8,10 +8,20 @@ can reach it for parameter aggregation, never for data).
 Dynamics: at each round, active devices exit w.p. ``p_exit`` and inactive
 devices re-enter w.p. ``p_entry`` (paper §V-E); exiting nodes lose their
 un-aggregated local updates, re-entering nodes wait for the next sync.
+
+Time-varying networks are first-class through the schedule constructors:
+``churn_schedule`` (ChurnProcess as the producer — node entry/exit with
+the per-round adjacency masking links of inactive endpoints),
+``link_flap_schedule`` (seeded link up/down events) and the
+``make_schedule`` dispatcher — all returning
+:class:`repro.core.schedule.NetworkSchedule`, which movement solvers,
+the engines and the Scenario layer consume directly.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.core.schedule import NetEvent, NetworkSchedule
 
 
 def fully_connected(n: int) -> np.ndarray:
@@ -125,3 +135,73 @@ class ChurnProcess:
     def contributing(self) -> np.ndarray:
         """Nodes whose updates count for the current aggregation."""
         return self.active & ~self.waiting
+
+
+# ---------------------------------------------------------------------------
+# NetworkSchedule producers (paper §V-E dynamics, ROADMAP "time-varying
+# topologies in the Scenario layer")
+# ---------------------------------------------------------------------------
+
+
+def churn_schedule(adj: np.ndarray, T: int, p_exit: float, p_entry: float,
+                   rng: np.random.Generator, *,
+                   tau: int | None = None) -> NetworkSchedule:
+    """Node entry/exit dynamics as a schedule — :class:`ChurnProcess` is
+    the producer (identical rng stepping to the legacy
+    ``federated.churn_activity`` path, with a ``sync()`` every ``tau``
+    rounds), and the per-round adjacency masks every link with an
+    inactive endpoint, so the movement plane finally SEES churn instead
+    of routing data over links that no longer exist."""
+    n = np.asarray(adj).shape[0]
+    proc = ChurnProcess(n, p_exit, p_entry, rng)
+    rows = []
+    for t in range(T):
+        rows.append(proc.step())
+        if tau and (t + 1) % tau == 0:
+            proc.sync()
+    return NetworkSchedule.masked(adj, np.stack(rows),
+                                  initial_active=np.ones(n, bool))
+
+
+def link_flap_schedule(adj: np.ndarray, T: int, rng: np.random.Generator,
+                       *, p_down: float = 0.05,
+                       p_up: float = 0.5) -> NetworkSchedule:
+    """Seeded link-flap dynamics: each up link fails w.p. ``p_down`` per
+    round and each failed base link recovers w.p. ``p_up`` (links absent
+    from the base graph never appear). One uniform draw per UNORDERED
+    pair: on the symmetric topologies this repo produces, (i, j) and
+    (j, i) are one physical link and flap together — a failed link does
+    not keep carrying reverse-direction traffic. Stored as a
+    piecewise-constant event list — memory is O(n² + #events), never
+    O(T·n²)."""
+    base = np.asarray(adj, bool)
+    n = base.shape[0]
+    lo = np.arange(n)[:, None] > np.arange(n)[None, :]
+    up = base.copy()
+    events: list[NetEvent] = []
+    for t in range(1, T):
+        r = rng.random(base.shape)
+        r = np.where(lo, r.T, r)         # r[i, j] == r[j, i]
+        down = up & (r < p_down)
+        back = base & ~up & (r < p_up)
+        for i, j in zip(*np.nonzero(down)):
+            events.append(NetEvent(t, "link_down", int(i), int(j)))
+        for i, j in zip(*np.nonzero(back)):
+            events.append(NetEvent(t, "link_up", int(i), int(j)))
+        up = (up & ~down) | back
+    return NetworkSchedule.from_events(base, T, events)
+
+
+def make_schedule(kind: str, adj: np.ndarray, T: int,
+                  rng: np.random.Generator, *, p_exit: float = 0.0,
+                  p_entry: float = 0.0, p_flap: float = 0.05,
+                  p_recover: float = 0.5,
+                  tau: int | None = None) -> NetworkSchedule:
+    """CLI/Scenario dispatcher over the schedule producers."""
+    if kind == "static":
+        return NetworkSchedule.constant(adj, T)
+    if kind == "churn":
+        return churn_schedule(adj, T, p_exit, p_entry, rng, tau=tau)
+    if kind == "flap":
+        return link_flap_schedule(adj, T, rng, p_down=p_flap, p_up=p_recover)
+    raise ValueError(f"unknown schedule kind {kind!r}")

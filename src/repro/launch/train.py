@@ -35,7 +35,7 @@ from repro.core import estimator as est
 from repro.core import federated as F
 from repro.core import movement as mv
 from repro.core.costs import synthetic_costs, testbed_like_costs, with_capacity
-from repro.core.topology import make_topology
+from repro.core.topology import make_schedule, make_topology
 from repro.data import pipeline as pl
 from repro.data.synthetic import make_image_dataset, make_token_dataset
 from repro.launch import steps as St
@@ -71,27 +71,51 @@ def run_fog(args) -> dict:
     rng = np.random.default_rng(args.seed)
     data = make_image_dataset(n_train=args.n_train, n_test=args.n_test,
                               seed=args.seed)
+    sched_kind = args.schedule
+    p_exit, p_entry = args.p_exit, args.p_entry
+    if args.churn:                       # shorthand for a symmetric churn
+        sched_kind = "churn"
+        p_exit = p_exit or args.churn
+        p_entry = p_entry or args.churn
+    if sched_kind == "static" and (p_exit or p_entry):
+        sched_kind = "churn"             # legacy --p-exit/--p-entry path
+    if sched_kind == "flap" and (p_exit or p_entry):
+        raise SystemExit("--schedule flap does not model node churn; "
+                         "drop --p-exit/--p-entry/--churn or use "
+                         "--schedule churn")
     cfg = F.FedConfig(n=args.n, T=args.T, tau=args.tau, eta=args.eta,
                       model=args.model, iid=not args.non_iid, seed=args.seed,
-                      p_exit=args.p_exit, p_entry=args.p_entry)
+                      p_exit=p_exit, p_entry=p_entry)
     mk = testbed_like_costs if args.costs == "testbed" else synthetic_costs
     traces = mk(cfg.n, cfg.T, rng, f_err=args.f_err)
     adj = make_topology(args.topology, cfg.n, rng,
                         rho=args.rho, costs=traces.c_node.mean(0))
     streams = pl.poisson_streams(cfg.n, cfg.T, data[1], iid=cfg.iid, rng=rng)
     D = pl.counts(streams)
-    plan = solve_setting(args.setting, traces, adj, D,
+    schedule = make_schedule(sched_kind, adj, cfg.T, rng,
+                             p_exit=p_exit, p_entry=p_entry,
+                             p_flap=args.p_flap, p_recover=args.p_recover,
+                             tau=cfg.tau)
+    dynamic = schedule.static_adj is None
+    # schedule-aware planning (replan-on-event) unless --plan-once;
+    # plan-once solves on the base graph and the plan is then realized
+    # against the schedule: in-flight data over dead links is lost
+    plan_network = schedule if (dynamic and not args.plan_once) else adj
+    plan = solve_setting(args.setting, traces, plan_network, D,
                          error_model=args.error_model)
-    activity = (F.churn_activity(cfg, rng)
-                if cfg.p_exit or cfg.p_entry else None)
+    if dynamic and args.plan_once:
+        plan = mv.realize_plan(plan, schedule)
     from repro.core.engine import resolve_engine
 
     engine = resolve_engine(args.engine)
     hist = F.run_network_aware(cfg, data, traces, adj, plan,
-                               streams=streams, activity=activity,
+                               streams=streams, schedule=schedule,
                                engine=engine)
     cost = mv.plan_cost(plan, traces, D, error_model=args.error_model)
     out = {"mode": "fog", "setting": args.setting, "engine": engine,
+           "schedule": sched_kind,
+           "replan": bool(dynamic and not args.plan_once),
+           "n_events": len(schedule.events_in(0, cfg.T)),
            "final_acc": hist["test_acc"][-1] if hist["test_acc"] else None,
            "acc_curve": hist["test_acc"], "cost": cost,
            "sim_before": hist["sim_before"], "sim_after": hist["sim_after"]}
@@ -229,6 +253,23 @@ def main(argv=None):
     ap.add_argument("--non-iid", action="store_true")
     ap.add_argument("--p-exit", type=float, default=0.0)
     ap.add_argument("--p-entry", type=float, default=0.0)
+    ap.add_argument("--schedule", default="static",
+                    choices=["static", "churn", "flap"],
+                    help="network schedule: static, node entry/exit "
+                         "churn (ChurnProcess producer; the movement "
+                         "plane sees inactive endpoints), or seeded "
+                         "link flaps")
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="shorthand: --schedule churn with "
+                         "p_exit = p_entry = CHURN")
+    ap.add_argument("--p-flap", type=float, default=0.05,
+                    help="per-round link failure prob (--schedule flap)")
+    ap.add_argument("--p-recover", type=float, default=0.5,
+                    help="per-round failed-link recovery prob")
+    ap.add_argument("--plan-once", action="store_true",
+                    help="plan on the base graph and realize against "
+                         "the schedule (in-flight data over dead links "
+                         "is lost) instead of schedule-aware replanning")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "scan", "sharded", "legacy"],
                     help="fog training engine: one compiled scan, the "

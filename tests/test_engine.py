@@ -127,3 +127,55 @@ def test_stage_rounds_consistent_with_pad_batches():
         np.testing.assert_array_equal(w[t], w_t)
         np.testing.assert_array_equal(x[idx[t]] * w[t][..., None, None],
                                       xb_t * w_t[..., None, None])
+
+
+# ---------------------------------------------------------------------------
+# AsyncEvaluator: worker failures must propagate at the sync point
+# (collect/result/shutdown), never be swallowed
+# ---------------------------------------------------------------------------
+
+
+def _tiny_eval_set():
+    x = np.zeros((4, 3), np.float32)
+    y = np.zeros(4, np.int32)
+    return x, y
+
+
+def test_async_evaluator_ok_path_and_result_alias():
+    import jax.numpy as jnp
+
+    x, y = _tiny_eval_set()
+    ev = eng.AsyncEvaluator(lambda p, xx: jnp.zeros((xx.shape[0], 10)), x, y)
+    ev.submit({"w": np.zeros(3, np.float32)})
+    ev.submit({"w": np.ones(3, np.float32)})
+    losses, accs = ev.result()               # alias of collect()
+    assert len(losses) == len(accs) == 2
+    assert all(np.isfinite(v) for v in losses)
+    ev.shutdown()                            # idempotent when drained
+
+
+def test_async_evaluator_propagates_dispatch_error_on_collect():
+    def bad(p, xx):
+        raise ValueError("boom")
+
+    x, y = _tiny_eval_set()
+    ev = eng.AsyncEvaluator(bad, x, y)
+    ev.submit({"w": np.zeros(3, np.float32)})   # must NOT raise here
+    ev.submit({"w": np.zeros(3, np.float32)})   # no-op after failure
+    with pytest.raises(RuntimeError) as ei:
+        ev.collect()
+    assert isinstance(ei.value.__cause__, ValueError)
+    # error is consumed: evaluator is usable again afterwards
+    assert ev.collect() == ([], [])
+
+
+def test_async_evaluator_shutdown_raises_deferred_error():
+    def bad(p, xx):
+        raise ValueError("boom")
+
+    x, y = _tiny_eval_set()
+    ev = eng.AsyncEvaluator(bad, x, y)
+    ev.submit({"w": np.zeros(3, np.float32)})
+    with pytest.raises(RuntimeError):
+        ev.shutdown()
+    ev.shutdown()                            # cleared: now a no-op

@@ -1,0 +1,447 @@
+"""The time-varying network plane.
+
+Covers the :class:`NetworkSchedule` accessors and producers
+(churn / link-flap), the bitwise constant-schedule equivalence through
+the movement solvers and all three engines, ChurnProcess semantics
+(seeded reproducibility, sync()/contributing across τ boundaries,
+schedule vs legacy engine churn path), the per-round
+``MovementPlan.check`` regression, plan realization under dynamics and
+the edge-native capacity repair with ``ops.topk_neighbors`` fallbacks.
+"""
+import numpy as np
+import pytest
+
+from repro.core import federated as F
+from repro.core import movement as mv
+from repro.core.costs import synthetic_costs, with_capacity
+from repro.core.schedule import NetEvent, NetworkSchedule, as_schedule
+from repro.core.topology import (ChurnProcess, churn_schedule,
+                                 fully_connected, link_flap_schedule,
+                                 make_schedule, make_topology)
+from repro.data import pipeline as pl
+from repro.data.synthetic import make_image_dataset
+
+
+def _edges_equal(p, q):
+    e, f = p.edges, q.edges
+    return (np.array_equal(e.t, f.t) and np.array_equal(e.src, f.src)
+            and np.array_equal(e.dst, f.dst)
+            and np.array_equal(e.qty, f.qty)
+            and np.array_equal(p.r, q.r))
+
+
+# ---------------------------------------------------------------------------
+# accessors
+# ---------------------------------------------------------------------------
+
+
+def test_constant_schedule_is_zero_copy():
+    adj = fully_connected(7)
+    sched = NetworkSchedule.constant(adj, 50)
+    assert sched.static_adj is adj          # no O(T·n²), not even a copy
+    assert sched.adj_at(0) is adj and sched.adj_at(49) is adj
+    assert sched.activity().all()
+    assert sched.events_in(0, 50) == []
+    # broadcast view, not a materialization
+    assert sched.adj_view().base is adj or sched.adj_view().size == 0 \
+        or not sched.adj_view().flags.owndata
+
+
+def test_full_mode_matches_raw_stack():
+    rng = np.random.default_rng(0)
+    T, n = 6, 5
+    stack = rng.random((T, n, n)) < 0.5
+    sched = as_schedule(stack, T)
+    for t in range(T):
+        assert sched.adj_at(t) is stack[t] or np.array_equal(
+            sched.adj_at(t), stack[t])
+    assert sched.static_adj is None
+    # events derived from adjacent-round diffs
+    evs = sched.events_in(0, T)
+    up = sum(e.kind == "link_up" for e in evs)
+    down = sum(e.kind == "link_down" for e in evs)
+    want_up = sum((stack[t] & ~stack[t - 1]).sum() for t in range(1, T))
+    want_down = sum((stack[t - 1] & ~stack[t]).sum() for t in range(1, T))
+    assert (up, down) == (want_up, want_down)
+
+
+def test_event_schedule_replay_and_random_access():
+    base = np.zeros((3, 3), bool)
+    base[0, 1] = True
+    events = [NetEvent(2, "link_down", 0, 1), NetEvent(2, "link_up", 0, 2),
+              NetEvent(4, "link_up", 1, 2)]
+    sched = NetworkSchedule.from_events(base, 6, events)
+    assert sched.static_adj is None
+    expect = {0: [(0, 1)], 1: [(0, 1)], 2: [(0, 2)], 3: [(0, 2)],
+              4: [(0, 2), (1, 2)], 5: [(0, 2), (1, 2)]}
+    for t in range(6):                       # forward sweep
+        links = sorted(zip(*np.nonzero(sched.adj_at(t))))
+        assert links == expect[t], t
+    for t in (5, 0, 3, 2, 0):                # random access restarts
+        links = sorted(zip(*np.nonzero(sched.adj_at(t))))
+        assert links == expect[t], t
+    assert [e.t for e in sched.events_in(2, 5)] == [2, 2, 4]
+    assert sched.events_in(0, 2) == []
+
+
+def test_masked_schedule_removes_inactive_endpoints():
+    adj = fully_connected(4)
+    active = np.ones((3, 4), bool)
+    active[1, 2] = False
+    sched = NetworkSchedule.masked(adj, active)
+    assert np.array_equal(sched.adj_at(0), adj)
+    a1 = sched.adj_at(1)
+    assert not a1[2].any() and not a1[:, 2].any()
+    keep = [i for i in range(4) if i != 2]
+    assert np.array_equal(a1[np.ix_(keep, keep)], adj[np.ix_(keep, keep)])
+    assert np.array_equal(sched.active_at(1), active[1])
+    evs = sched.events_in(0, 3)
+    assert [(e.t, e.kind, e.node) for e in evs] == [(1, "exit", 2),
+                                                    (2, "entry", 2)]
+
+
+def test_as_schedule_rejects_horizon_mismatch():
+    adj = fully_connected(3)
+    with pytest.raises(ValueError):
+        as_schedule(NetworkSchedule.constant(adj, 5), 7)
+    with pytest.raises(ValueError):
+        as_schedule(np.zeros((5, 3, 3), bool), 7)
+
+
+# ---------------------------------------------------------------------------
+# producers
+# ---------------------------------------------------------------------------
+
+
+def test_link_flap_seeded_and_within_support():
+    rng = np.random.default_rng(0)
+    adj = make_topology("random", 10, rng, rho=0.4)
+    s1 = link_flap_schedule(adj, 12, np.random.default_rng(4), p_down=0.3)
+    s2 = link_flap_schedule(adj, 12, np.random.default_rng(4), p_down=0.3)
+    s3 = link_flap_schedule(adj, 12, np.random.default_rng(5), p_down=0.3)
+    for t in range(12):
+        a1 = s1.adj_at(t).copy()
+        assert np.array_equal(a1, s2.adj_at(t))      # seeded reproducible
+        assert not (a1 & ~adj).any()                 # never outside base
+    assert any(not np.array_equal(s1.adj_at(t).copy(), s3.adj_at(t))
+               for t in range(12))
+    assert len(s1.events_in(0, 12)) > 0
+    assert all(e.kind.startswith("link") for e in s1.events_in(0, 12))
+
+
+def test_link_flap_symmetric_pairs_flap_together():
+    """(i, j) and (j, i) are one physical link on symmetric topologies:
+    a failed link must not keep carrying reverse-direction traffic."""
+    adj = make_topology("social", 12, np.random.default_rng(0))
+    assert np.array_equal(adj, adj.T)
+    sched = link_flap_schedule(adj, 10, np.random.default_rng(2),
+                               p_down=0.3, p_up=0.4)
+    saw_change = False
+    for t in range(10):
+        a = np.asarray(sched.adj_at(t), bool)
+        assert np.array_equal(a, a.T), t
+        saw_change = saw_change or not np.array_equal(a, adj)
+    assert saw_change
+
+
+def test_churn_process_seeded_reproducibility():
+    def trace(seed):
+        proc = ChurnProcess(20, 0.3, 0.2, np.random.default_rng(seed))
+        return np.stack([proc.step() for _ in range(15)])
+
+    assert np.array_equal(trace(1), trace(1))
+    assert not np.array_equal(trace(1), trace(2))
+    s1 = churn_schedule(fully_connected(20), 15, 0.3, 0.2,
+                        np.random.default_rng(1), tau=5)
+    assert np.array_equal(s1.activity(), trace(1))   # same producer
+
+
+def test_churn_sync_contributing_across_tau():
+    # deterministic: p_entry=1 re-enters every inactive node, p_exit=0
+    proc = ChurnProcess(3, p_exit=0.0, p_entry=1.0,
+                        rng=np.random.default_rng(0))
+    proc.active[:] = [True, False, True]
+    act = proc.step()
+    assert act.all()                         # node 1 re-entered
+    assert proc.waiting[1] and not proc.waiting[0]
+    # re-entered mid-period: active but NOT contributing until sync
+    assert list(proc.contributing()) == [True, False, True]
+    proc.sync()                              # τ boundary: gets parameters
+    assert proc.contributing().all()
+    proc.step()                              # next period: still counted
+    assert proc.contributing().all()
+
+
+def test_churn_schedule_matches_legacy_activity():
+    cfg = F.FedConfig(n=9, T=24, tau=6, p_exit=0.25, p_entry=0.2)
+    legacy = F.churn_activity(cfg, np.random.default_rng(11))
+    sched = churn_schedule(fully_connected(9), 24, 0.25, 0.2,
+                           np.random.default_rng(11), tau=6)
+    assert np.array_equal(sched.activity(), legacy)
+    # t=0 exits are events (initial state is all-active)
+    if not legacy[0].all():
+        assert any(e.t == 0 and e.kind == "exit"
+                   for e in sched.events_in(0, 1))
+
+
+def test_make_schedule_dispatch():
+    rng = np.random.default_rng(0)
+    adj = fully_connected(5)
+    assert make_schedule("static", adj, 8, rng).static_adj is adj
+    assert make_schedule("churn", adj, 8, rng, p_exit=0.5,
+                         p_entry=0.5, tau=4).n == 5
+    assert make_schedule("flap", adj, 8, rng, p_flap=0.5).T == 8
+    with pytest.raises(ValueError):
+        make_schedule("nope", adj, 8, rng)
+
+
+# ---------------------------------------------------------------------------
+# constant schedule == static adj, bitwise, through the whole stack
+# ---------------------------------------------------------------------------
+
+
+def _movement_setup(n=10, T=8, seed=0):
+    rng = np.random.default_rng(seed)
+    tr = with_capacity(synthetic_costs(n, T, rng), cap_node=40.0,
+                       cap_link=10.0)
+    adj = make_topology("random", n, rng, rho=0.5)
+    D = rng.poisson(20, (T, n)).astype(float)
+    return tr, adj, D
+
+
+def test_greedy_constant_schedule_bitwise():
+    tr, adj, D = _movement_setup()
+    p_adj = mv.greedy_linear(tr, adj)
+    p_sched = mv.greedy_linear(tr, NetworkSchedule.constant(adj, 8))
+    assert _edges_equal(p_adj, p_sched)
+    # (T, n, n) ndarray vs full-mode schedule
+    stack = np.broadcast_to(adj, (8, *adj.shape)).copy()
+    stack[3:, 0, :] = False
+    p_arr = mv.greedy_linear(tr, stack)
+    p_full = mv.greedy_linear(tr, NetworkSchedule.full(stack))
+    assert _edges_equal(p_arr, p_full)
+
+
+def test_repair_constant_schedule_bitwise():
+    tr, adj, D = _movement_setup()
+    plan = mv.greedy_linear(tr, adj)
+    r_adj = mv.repair_capacities(plan, tr, adj, D)
+    r_sched = mv.repair_capacities(plan, tr,
+                                   NetworkSchedule.constant(adj, 8), D)
+    assert _edges_equal(r_adj, r_sched)
+    # still bitwise-equal to the dense oracle
+    r_dense = mv.repair_capacities_dense(
+        mv.MovementPlan(s=plan.s, r=plan.r), tr, adj, D)
+    np.testing.assert_array_equal(r_sched.s, r_dense.s)
+    np.testing.assert_array_equal(r_sched.r, r_dense.r)
+
+
+def test_convex_constant_schedule_bitwise():
+    rng = np.random.default_rng(2)
+    n, T = 5, 4
+    tr = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=0.6)
+    D = np.full((T, n), 15.0)
+    p_adj = mv.solve_convex(tr, adj, D, iters=60)
+    p_sched = mv.solve_convex(tr, NetworkSchedule.constant(adj, T), D,
+                              iters=60)
+    np.testing.assert_array_equal(p_adj.s, p_sched.s)
+    np.testing.assert_array_equal(p_adj.r, p_sched.r)
+
+
+def _engine_setup(n=4, T=6, tau=3, seed=0, p_exit=0.0, p_entry=0.0):
+    data = make_image_dataset(n_train=600, n_test=200, seed=0)
+    cfg = F.FedConfig(n=n, T=T, tau=tau, eta=0.05, model="mlp", seed=seed,
+                      p_exit=p_exit, p_entry=p_entry)
+    rng = np.random.default_rng(seed)
+    traces = synthetic_costs(n, T, rng)
+    adj = fully_connected(n)
+    streams = pl.poisson_streams(n, T, data[1], rng=rng)
+    plan = mv.greedy_linear(traces, adj)
+    return cfg, data, traces, adj, plan, streams
+
+
+def _hist_equal(h1, h2):
+    assert h1["agg_round"] == h2["agg_round"]
+    assert h1["test_acc"] == h2["test_acc"]
+    assert h1["test_loss"] == h2["test_loss"]
+    np.testing.assert_array_equal(np.stack(h1["device_loss"]),
+                                  np.stack(h2["device_loss"]))
+    np.testing.assert_array_equal(np.stack(h1["H_agg"]),
+                                  np.stack(h2["H_agg"]))
+    np.testing.assert_array_equal(np.stack(h1["active"]),
+                                  np.stack(h2["active"]))
+
+
+@pytest.mark.parametrize("engine", ["scan", "sharded", "legacy"])
+def test_engine_history_constant_schedule_bitwise(engine):
+    cfg, data, traces, adj, plan, streams = _engine_setup()
+    h_adj = F.run_network_aware(cfg, data, traces, adj, plan,
+                                streams=streams, engine=engine)
+    sched = NetworkSchedule.constant(adj, cfg.T)
+    h_sched = F.run_network_aware(cfg, data, traces, adj, plan,
+                                  streams=streams, schedule=sched,
+                                  engine=engine)
+    _hist_equal(h_adj, h_sched)
+
+
+def test_engine_churn_schedule_equals_legacy_activity_path():
+    """ChurnProcess-as-schedule must reproduce the legacy engine churn
+    path exactly: same rng → same mask → identical histories."""
+    kw = dict(p_exit=0.3, p_entry=0.2, seed=3)
+    cfg, data, traces, adj, plan, streams = _engine_setup(**kw)
+    activity = F.churn_activity(cfg, np.random.default_rng(7))
+    assert not activity.all()                # churn actually happens
+    h_act = F.run_network_aware(cfg, data, traces, adj, plan,
+                                streams=streams, activity=activity,
+                                engine="scan")
+    sched = churn_schedule(adj, cfg.T, cfg.p_exit, cfg.p_entry,
+                           np.random.default_rng(7), tau=cfg.tau)
+    cfg2, data2, traces2, adj2, plan2, streams2 = _engine_setup(**kw)
+    h_sched = F.run_network_aware(cfg2, data2, traces2, adj2, plan2,
+                                  streams=streams2, schedule=sched,
+                                  engine="scan")
+    _hist_equal(h_act, h_sched)
+
+
+def test_run_network_aware_rejects_mismatched_schedule():
+    cfg, data, traces, adj, plan, streams = _engine_setup()
+    bad = NetworkSchedule.constant(adj, cfg.T + 1)
+    with pytest.raises(ValueError):
+        F.run_network_aware(cfg, data, traces, adj, plan,
+                            streams=streams, schedule=bad)
+
+
+# ---------------------------------------------------------------------------
+# planning under dynamics + MovementPlan.check regression
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_replans_on_events_and_beats_plan_once():
+    tr, adj, D = _movement_setup(n=12, T=10, seed=5)
+    sched = churn_schedule(adj, 10, 0.3, 0.2, np.random.default_rng(5),
+                           tau=5)
+    assert sched.static_adj is None
+    replan = mv.greedy_linear(tr, sched)
+    replan.check(sched)                      # never uses a masked link
+    once = mv.realize_plan(mv.greedy_linear(tr, adj), sched)
+    once.check(sched)
+    # replan takes the per-point minimum over the TRUE candidate set, so
+    # its objective can never exceed the realized static plan's
+    assert (mv.plan_cost(replan, tr, D)["total"]
+            <= mv.plan_cost(once, tr, D)["total"] + 1e-9)
+
+
+def test_check_per_round_regression():
+    """A plan that is valid round-by-round on a time-varying network was
+    rejected by the old single-static-``adj`` check signature; the
+    schedule-aware check validates each round against ITS adjacency."""
+    n, T = 3, 4
+    base = np.zeros((n, n), bool)
+    base[0, 1] = True                        # round 0-1: only 0→1
+    events = [NetEvent(2, "link_down", 0, 1),
+              NetEvent(2, "link_up", 0, 2)]  # round 2+: only 0→2
+    sched = NetworkSchedule.from_events(base, T, events)
+    tr = synthetic_costs(n, T, np.random.default_rng(0))
+    tr.c_node[:, 0] = 100.0                  # node 0 must offload
+    tr.f_err[:] = 100.0                      # discarding is terrible
+    plan = mv.greedy_linear(tr, sched)
+    used = set(zip(plan.edges.t, plan.edges.src, plan.edges.dst))
+    assert (0, 0, 1) in used and (2, 0, 2) in used
+    plan.check(sched)                        # valid round-by-round
+    with pytest.raises(AssertionError):      # old signature: one matrix
+        plan.check(base)
+    with pytest.raises(AssertionError):
+        plan.check(np.asarray(sched.adj_at(T - 1), bool).copy())
+
+
+def test_realize_plan_conserves_and_discards_lost_links():
+    tr, adj, D = _movement_setup(n=8, T=6, seed=1)
+    plan = mv.greedy_linear(tr, adj)
+    stack = np.broadcast_to(adj, (6, *adj.shape)).copy()
+    stack[2:] = False                        # network dies at round 2
+    realized = mv.realize_plan(plan, NetworkSchedule.full(stack))
+    e = realized.edges
+    total = realized.r.copy()
+    np.add.at(total, (e.t, e.src), e.qty)
+    np.testing.assert_allclose(total, 1.0)
+    assert not ((e.t >= 2) & (e.src != e.dst)).any()
+    lost = plan.offload_fraction()[2:].sum()
+    assert lost > 0
+    np.testing.assert_allclose(realized.r[2:].sum() - plan.r[2:].sum(),
+                               lost)
+
+
+# ---------------------------------------------------------------------------
+# edge-native capacity repair (topk_neighbors next-best fallback)
+# ---------------------------------------------------------------------------
+
+
+def _assert_feasible(plan, tr, D, adj):
+    T, n = plan.r.shape
+    e = plan.edges
+    total = plan.r.copy()
+    np.add.at(total, (e.t, e.src), e.qty)
+    np.testing.assert_allclose(total, 1.0, atol=1e-6)
+    plan.check(adj)
+    G = plan.processed(D)
+    assert np.all(G <= tr.cap_node + 1e-6)
+    for t in range(T):
+        src, dst, qty = plan.round_edges(t)
+        off = src != dst
+        assert np.all(qty[off] * D[t, src[off]]
+                      <= tr.cap_link[t, src[off], dst[off]] + 1e-6)
+
+
+def test_repair_edges_feasible_and_noop_when_feasible():
+    tr, adj, D = _movement_setup(n=10, T=8, seed=2)
+    plan = mv.greedy_linear(tr, adj)
+    repaired = mv.repair_capacities_edges(plan, tr, adj, D, k=3)
+    _assert_feasible(repaired, tr, D, adj)
+    # without capacities the plan passes through bitwise unchanged
+    tr2 = synthetic_costs(10, 8, np.random.default_rng(2))
+    plan2 = mv.greedy_linear(tr2, adj)
+    assert _edges_equal(mv.repair_capacities_edges(plan2, tr2, adj, D),
+                        plan2)
+
+
+def test_repair_edges_fractional_plan_feasible():
+    rng = np.random.default_rng(4)
+    n, T = 6, 5
+    tr = with_capacity(synthetic_costs(n, T, rng), cap_node=30.0,
+                       cap_link=8.0)
+    adj = make_topology("random", n, rng, rho=0.7)
+    D = rng.poisson(15, (T, n)).astype(float)
+    plan = mv.solve_convex(tr, adj, D, iters=80)
+    repaired = mv.repair_capacities_edges(plan, tr, adj, D, k=3)
+    _assert_feasible(repaired, tr, D, adj)
+
+
+def test_repair_edges_uses_next_best_neighbor():
+    """When the preferred target's link saturates, the spill must land
+    on the next-best neighbor (which has headroom), not in the discard
+    vector the oracle's local/discard fallback would use."""
+    n, T = 3, 3
+    tr = synthetic_costs(n, T, np.random.default_rng(0))
+    tr.c_node[:] = np.array([50.0, 1.0, 2.0])[None]   # 0 must offload
+    tr.c_link[:] = 0.1
+    tr.f_err[:] = 60.0                                # discard terrible
+    tr.cap_node[:] = 1e9
+    tr.cap_link[:] = 1e9
+    adj = np.zeros((n, n), bool)
+    adj[0, 1] = adj[0, 2] = True
+    D = np.full((T, n), 10.0)
+    plan = mv.greedy_linear(tr, adj)
+    assert (0, 0, 1) in set(zip(plan.edges.t, plan.edges.src,
+                                plan.edges.dst))      # prefers node 1
+    tr.cap_link[:, 0, 1] = 4.0                        # 1's link saturates
+    repaired = mv.repair_capacities_edges(plan, tr, adj, D, k=2)
+    _assert_feasible(repaired, tr, D, adj)
+    s0 = repaired.round_dense(0)
+    assert s0[0, 1] == pytest.approx(0.4)             # capped at 4/10
+    assert s0[0, 2] == pytest.approx(0.6)             # spill rerouted
+    assert repaired.r[0, 0] == 0.0                    # nothing discarded
+    # the oracle rule discards (or processes at cost 50) instead
+    oracle = mv.repair_capacities(plan, tr, adj, D)
+    assert mv.plan_cost(repaired, tr, D)["total"] \
+        <= mv.plan_cost(oracle, tr, D)["total"] + 1e-9
