@@ -46,16 +46,21 @@ def make_plan(setting: str, traces, adj, D, error_model="discard",
     T_, n = D.shape
     if setting == "A":
         return mv.no_movement_plan(T_, n)
-    tr = traces
+    tr, D_plan = traces, D
     if setting in ("C", "E"):
-        tr = est.estimate_traces(traces, L=5)
-        D = est.estimate_counts(D, L=5)
+        tr = est.estimate_traces(traces)
+        D_plan = est.estimate_counts(D)
     if error_model == "discard":
         plan = mv.greedy_linear(tr, adj)
     else:
-        plan = mv.solve_convex(tr, adj, D, error_model=error_model,
+        plan = mv.solve_convex(tr, adj, D_plan, error_model=error_model,
                                gamma=gamma, iters=400)
     if setting in ("D", "E"):
+        # Table III: plan on estimates, EXECUTE on truth — the repair
+        # enforces capacities against the true arrivals (and true
+        # traces), exactly like launch.train.solve_setting; repairing
+        # against estimated counts under-caps the rounds the estimator
+        # under-predicts
         plan = mv.repair_capacities(plan, traces, adj, D)
     return plan
 
@@ -125,24 +130,31 @@ class Scenario:
     gamma: float = 1.0
     activity: np.ndarray | None = None
     schedule: NetworkSchedule | None = None
-    replan: bool = True          # plan on the schedule vs the base graph
+    # "oracle" plans on the true schedule, "predict" on the estimated
+    # schedule (estimator.predict_schedule), "once" on the static base
+    # graph; True/False are legacy aliases for oracle/once. Predictive
+    # and plan-once plans are realized against the true schedule.
+    replan: bool | str = "oracle"
 
 
 def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
                   iid=True, costs="testbed", topology="full", rho=1.0,
                   setting="B", error_model="sqrt", gamma=1.0,
                   medium="wifi", p_exit=0.0, p_entry=0.0, f_err=0.7,
-                  dynamics=None, p_flap=0.05, p_recover=0.5, replan=True,
-                  seed=0) -> Scenario:
+                  dynamics=None, p_flap=0.05, p_recover=0.5,
+                  replan="oracle", seed=0) -> Scenario:
     """Build one sweep point (same setup recipe as ``fog_experiment``).
 
     ``dynamics``: None (auto: "churn" when p_exit/p_entry set, else
     static), "churn" (node entry/exit via the ChurnProcess-produced
     NetworkSchedule — the movement plane sees inactive endpoints), or
-    "flap" (seeded link up/down events). ``replan=False`` plans on the
-    base graph and realizes the plan against the schedule afterwards
-    (in-flight data over dead links is lost) — the plan-once baseline
-    of the ``network_dynamics`` bench.
+    "flap" (seeded link up/down events). ``replan``: "oracle" plans on
+    the true schedule (replan-on-event), "predict" on the schedule
+    ESTIMATED from the observed history (window-averaged availability,
+    ``estimator.predict_schedule``), "once" on the static base graph;
+    predictive and plan-once plans are then realized against the true
+    schedule — in-flight data over dead links or toward churned-out
+    receivers is lost (``mv.realize_plan``).
     """
     rng = np.random.default_rng(seed)
     data = dataset(scale.n_train, scale.n_test)
@@ -181,16 +193,36 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
 def _estimated(sc: Scenario):
     """Imperfect-information settings plan on estimated traces/counts."""
     if sc.setting in ("C", "E"):
-        return (est.estimate_traces(sc.traces, L=5),
-                est.estimate_counts(sc.D, L=5))
+        return (est.estimate_traces(sc.traces),
+                est.estimate_counts(sc.D))
     return sc.traces, sc.D
 
 
+def replan_mode(replan) -> str:
+    """Normalize ``Scenario.replan``: "oracle" / "predict" / "once",
+    with the legacy booleans as aliases (True → oracle, False → once)."""
+    if replan is True:
+        return "oracle"
+    if replan is False:
+        return "once"
+    if replan in ("oracle", "predict", "once"):
+        return replan
+    raise ValueError(f"unknown replan mode {replan!r}; expected "
+                     "'oracle', 'predict', 'once' or a bool")
+
+
 def _plan_network(sc: Scenario):
-    """What the planner sees: the time-varying schedule when the point
-    replans on events, the static base graph otherwise."""
-    if sc.schedule is not None and sc.replan:
+    """What the planner sees: the true schedule (oracle replanning),
+    the schedule PREDICTED from the observed history (setting-C style
+    imperfect network information), or the static base graph
+    (plan-once)."""
+    if sc.schedule is None:
+        return sc.adj
+    mode = replan_mode(sc.replan)
+    if mode == "oracle":
         return sc.schedule
+    if mode == "predict":
+        return est.predict_schedule(sc.schedule)
     return sc.adj
 
 
@@ -205,12 +237,20 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
     settings (D/E) get the streamed sparse repair afterwards.
 
     Dynamics: points carrying a :class:`NetworkSchedule` plan against
-    it when ``replan`` is set (the solvers take schedules directly);
-    plan-once points plan on the base graph and the static plan is then
-    realized against the schedule — in-flight data over missing links
-    is lost to the discard vector (``mv.realize_plan``).
+    the network view their ``replan`` mode allows — the true schedule
+    ("oracle"), the estimated schedule ("predict"), or the static base
+    graph ("once") — and EVERY scheduled plan is then realized against
+    the true schedule: in-flight data over missing links, or toward
+    receivers that churn out by the arrival round, is lost to the
+    discard vector (``mv.realize_plan``). Oracle GREEDY plans pass
+    through realization unchanged (``greedy_linear`` is
+    receiver-aware); oracle convex plans may shed receiver-side shares
+    — the convex solver prices per-round adjacency only, and
+    realization is what keeps every mode's accounting on the network
+    that actually happened.
     """
     plans: list = [None] * len(scenarios)
+    nets = [_plan_network(sc) for sc in scenarios]
     groups: dict[tuple, list[int]] = {}
     for b, sc in enumerate(scenarios):
         T_, n = sc.D.shape
@@ -218,7 +258,7 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
             plans[b] = mv.no_movement_plan(T_, n)
         elif sc.error_model == "discard":
             tr, _ = _estimated(sc)
-            plans[b] = mv.greedy_linear(tr, _plan_network(sc))
+            plans[b] = mv.greedy_linear(tr, nets[b])
         else:
             groups.setdefault((T_, n, sc.error_model, sc.gamma),
                               []).append(b)
@@ -226,19 +266,19 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
         estimated = [_estimated(scenarios[b]) for b in idxs]
         trs = [tr for tr, _ in estimated]
         Ds = [D for _, D in estimated]
-        adjs = [_plan_network(scenarios[b]) for b in idxs]
+        adjs = [nets[b] for b in idxs]
         for b, p in zip(idxs, mv.solve_convex_batched(
                 trs, adjs, Ds, error_model=em, gamma=gamma, iters=iters,
                 seeds=seed)):
             plans[b] = p
     for b, sc in enumerate(scenarios):
         if sc.setting in ("D", "E"):
-            # setting E repairs on the ESTIMATED counts, like make_plan:
-            # the imperfect-information planner never sees true volumes
-            _, D_rep = _estimated(sc)
+            # Table III: plan on estimates, execute on truth — repair
+            # enforces capacities against the TRUE arrivals (parity
+            # with make_plan and launch.train.solve_setting)
             plans[b] = mv.repair_capacities(plans[b], sc.traces,
-                                            _plan_network(sc), D_rep)
-        if sc.schedule is not None and not sc.replan:
+                                            nets[b], sc.D)
+        if sc.schedule is not None:
             plans[b] = mv.realize_plan(plans[b], sc.schedule)
     return plans
 

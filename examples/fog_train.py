@@ -33,8 +33,14 @@ Network dynamics knobs
 p_entry = 0.05) through the NetworkSchedule plane: planning replans on
 every event (the movement plane sees inactive endpoints), the engine
 stages the same active mask. ``--schedule flap`` flips links instead.
-``--plan-once`` freezes the plan on the base graph and realizes it
-against the schedule — data in flight over dead links is lost.
+``--replan`` picks what the planner sees: ``oracle`` (the true
+schedule, replan-on-event), ``predict`` (the schedule estimated from
+the observed event history — window-averaged link-availability and
+device-activity rates, the deployable setting-C analog), or ``once``
+(the static base graph; ``--plan-once`` is an alias). Execution always
+runs on the true schedule — predictive and plan-once plans are
+realized against it, losing data in flight over dead links or toward
+receivers that churned out by the arrival round.
 """
 import argparse
 import json
@@ -51,11 +57,13 @@ if __name__ == "__main__":
     ap.add_argument("--schedule", default="static",
                     choices=["static", "churn", "flap"])
     ap.add_argument("--churn", type=float, default=0.0)
+    ap.add_argument("--replan", default="oracle",
+                    choices=["oracle", "predict", "once"])
     ap.add_argument("--plan-once", action="store_true")
     args = ap.parse_args()
     argv = ["--mode", "fog", "--model", "cnn", "--setting", args.setting,
             "--costs", "testbed", "--engine", args.engine,
-            "--schedule", args.schedule]
+            "--schedule", args.schedule, "--replan", args.replan]
     if args.churn:
         argv += ["--churn", str(args.churn)]
     if args.plan_once:

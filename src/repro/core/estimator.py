@@ -1,59 +1,190 @@
-"""Imperfect-information estimation (paper §IV-A / §V-A).
+"""Imperfect-information estimation (paper §IV-A / §V-A, §V-E).
 
 Divide the horizon T into L windows T_1..T_L; within window l, the
 optimizer sees the time-AVERAGED observations of D_i(t), c_i(t), c_ij(t),
 C_i(t) from window l−1 (window 0 uses uninformative priors). The plan
 solved on estimated traces is then executed — and costed — on the true
 traces (settings C and E in Table III).
+
+The same window-averaging generalizes from cost traces to the NETWORK
+itself (the prediction plane): :func:`predict_schedule` learns
+per-window link-availability and device-activity rates from the
+observed history of a :class:`~repro.core.schedule.NetworkSchedule`
+and emits a predicted schedule for the movement solvers to plan
+against, while execution, costing and ``realize_plan`` confront the
+plan with the true schedule. This is the deployable middle ground
+between oracle replanning (future events known) and plan-once
+(dynamics ignored) — fog networks must be *predicted*, not assumed
+known.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import numpy as np
 
 from repro.core.costs import CostTraces
+from repro.core.schedule import NetworkSchedule
+
+
+# window count shared by every setting-C/E call site (traces, counts
+# and schedule prediction): change it HERE so planning and the bench
+# diagnostics keep describing the same estimate
+DEFAULT_WINDOWS = 5
 
 
 def window_bounds(T: int, L: int) -> list[tuple[int, int]]:
+    """Edges of the estimation windows: ``min(L, T)`` half-open
+    ``(start, stop)`` ranges covering ``[0, T)``.
+
+    The effective window count is clamped so every window holds at
+    least one round — ``linspace`` with L > T produces duplicate
+    integer edges, i.e. EMPTY windows whose means are NaN, which then
+    reach the solvers (the L > T estimator bug)."""
+    if T <= 0:
+        return []
+    L = max(1, min(int(L), int(T)))
     edges = np.linspace(0, T, L + 1).astype(int)
     return [(int(edges[i]), int(edges[i + 1])) for i in range(L)]
 
 
 def _window_avg(arr: np.ndarray, T: int, L: int, prior: float) -> np.ndarray:
+    """Window-l rows hold the mean of window l−1 (window 0: the prior).
+
+    Empty-predecessor windows (impossible after the ``window_bounds``
+    clamp, kept as a guard) backfill from the last non-empty window
+    instead of emitting NaN rows."""
     out = np.empty_like(arr, dtype=float)
     bounds = window_bounds(T, L)
+    last: np.ndarray | None = None
     for l, (a, b) in enumerate(bounds):
         if l == 0:
             out[a:b] = prior
         else:
             pa, pb = bounds[l - 1]
-            out[a:b] = arr[pa:pb].mean(axis=0, keepdims=True)
+            if pb > pa:
+                last = arr[pa:pb].mean(axis=0, keepdims=True)
+            out[a:b] = last if last is not None else prior
     return out
 
 
-def estimate_traces(traces: CostTraces, L: int = 5,
+def estimate_traces(traces: CostTraces, L: int = DEFAULT_WINDOWS,
                     prior: float = 0.5) -> CostTraces:
     T = traces.T
-    cap_prior = float(np.nanmean(np.where(np.isfinite(traces.cap_node),
-                                          traces.cap_node, np.nan)))
-    if not np.isfinite(cap_prior):
-        cap_prior = 1e12
+    finite = np.isfinite(traces.cap_node)
+    cap_prior = (float(np.mean(traces.cap_node[finite])) if finite.any()
+                 else 1e12)
     return CostTraces(
         c_node=_window_avg(traces.c_node, T, L, prior),
         c_link=_window_avg(traces.c_link, T, L, prior),
         f_err=_window_avg(traces.f_err, T, L, prior),
-        cap_node=np.where(np.isfinite(traces.cap_node),
-                          _window_avg(np.where(np.isfinite(traces.cap_node),
-                                               traces.cap_node, cap_prior),
+        cap_node=np.where(finite,
+                          _window_avg(np.where(finite, traces.cap_node,
+                                               cap_prior),
                                       T, L, cap_prior),
                           np.inf),
         cap_link=traces.cap_link.copy(),  # links observed passively
     )
 
 
-def estimate_counts(D: np.ndarray, L: int = 5) -> np.ndarray:
+def estimate_counts(D: np.ndarray, L: int = DEFAULT_WINDOWS) -> np.ndarray:
     """Window-averaged data-arrival estimates D̂_i(t)."""
     T = D.shape[0]
     prior = float(D.mean()) if D.size else 1.0
     return _window_avg(D, T, L, prior)
+
+
+# ---------------------------------------------------------------------------
+# Prediction plane: window-averaged network estimation (setting-C style
+# imperfect information generalized from cost traces to the schedule)
+# ---------------------------------------------------------------------------
+
+
+def window_activity_rates(schedule: NetworkSchedule,
+                          L: int = DEFAULT_WINDOWS) -> np.ndarray:
+    """(W, n) observed per-window device-activity rates (W = min(L, T)):
+    the fraction of the window's rounds each device was active."""
+    act = schedule.activity().astype(float)
+    return np.stack([act[a:b].mean(axis=0)
+                     for a, b in window_bounds(schedule.T, L)])
+
+
+def window_link_rates(schedule: NetworkSchedule,
+                      L: int = DEFAULT_WINDOWS) -> np.ndarray:
+    """(W, n, n) observed per-window link-availability rates: the
+    fraction of the window's rounds each directed link was up in the
+    observed adjacency (masked schedules fold endpoint churn in, so the
+    rate is the realized availability the data plane experienced).
+    Memory is O(W·n²); the (T, n, n) stack is never materialized —
+    rounds stream through ``adj_at``'s reused buffer."""
+    out = []
+    for a, b in window_bounds(schedule.T, L):
+        acc = np.zeros((schedule.n, schedule.n))
+        for t in range(a, b):
+            acc += schedule.adj_at(t)
+        out.append(acc / max(b - a, 1))
+    return np.stack(out)
+
+
+def predict_schedule(observed: NetworkSchedule, L: int = DEFAULT_WINDOWS,
+                     *, mode: str = "threshold",
+                     threshold: float = 0.5) -> NetworkSchedule:
+    """Predicted :class:`NetworkSchedule` from the observed history.
+
+    Window l's prediction is window l−1's OBSERVED availability rates
+    (exactly the §IV-A estimator discipline applied to the network
+    itself); window 0 uses the round-0 truth — the initial network
+    state is known at deployment. Two predictors:
+
+    * ``mode="threshold"`` — a link / device is predicted present iff
+      its previous-window rate ≥ ``threshold`` (default 0.5: the Bayes
+      predictor under 0-1 loss for a per-window Bernoulli model);
+    * ``mode="expected"`` — the expected SUPPORT: anything observed at
+      all in the previous window is planned against (optimistic — the
+      planner keeps intermittently-available links in the candidate
+      set and ``realize_plan`` charges the in-transit losses).
+
+    The result is piecewise-constant (event-list storage, O(n² + E)
+    memory) with the predicted per-round active trace attached, so the
+    schedule-aware solvers also avoid offloading toward devices
+    predicted to have churned out by the arrival round. Movement plans
+    solved against the prediction must then be realized against the
+    TRUE schedule — execution and costing always run on truth.
+    """
+    if mode not in ("threshold", "expected"):
+        raise ValueError(f"unknown prediction mode {mode!r}; "
+                         "expected 'threshold' or 'expected'")
+    cut = threshold if mode == "threshold" else 1e-12
+    bounds = window_bounds(observed.T, L)
+    link_rates = window_link_rates(observed, L)
+    act_rates = window_activity_rates(observed, L)
+    adjs = [np.array(observed.adj_at(0), dtype=bool, copy=True)]
+    active = np.empty((observed.T, observed.n), bool)
+    a0, b0 = bounds[0]
+    active[a0:b0] = np.asarray(observed.active_at(0), bool)
+    for w in range(1, len(bounds)):
+        adjs.append(link_rates[w - 1] >= cut)
+        a, b = bounds[w]
+        active[a:b] = act_rates[w - 1] >= cut
+    return NetworkSchedule.piecewise(adjs, bounds, active=active)
+
+
+def schedule_prediction_accuracy(predicted: NetworkSchedule,
+                                 truth: NetworkSchedule) -> dict:
+    """Per-round agreement between a predicted and the true schedule:
+    link accuracy over the UNION of the two supports (links invented by
+    the prediction count as errors, not just links it missed) and
+    activity accuracy — diagnostics for the ``network_prediction``
+    bench."""
+    assert (predicted.T, predicted.n) == (truth.T, truth.n)
+    support = np.zeros((truth.n, truth.n), bool)
+    for t in range(truth.T):
+        support |= np.asarray(truth.adj_at(t), bool)
+        support |= np.asarray(predicted.adj_at(t), bool)
+    agree = total = 0.0
+    for t in range(truth.T):
+        p = np.asarray(predicted.adj_at(t), bool)[support]
+        q = np.asarray(truth.adj_at(t), bool)[support]
+        agree += float((p == q).sum())
+        total += float(support.sum())
+    act_acc = float((predicted.activity() == truth.activity()).mean())
+    return {"link_accuracy": agree / total if total else 1.0,
+            "activity_accuracy": act_acc}

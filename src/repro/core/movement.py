@@ -31,8 +31,12 @@ interchangeable; static-``adj`` call sites are bitwise identical to the
 pre-schedule paths, and a constant schedule never materializes the
 (T, n, n) adjacency). ``realize_plan`` confronts a plan with the
 network that actually happened: transfers over links absent at their
-round (down, or an endpoint churned out) are lost in transit — the
-plan-once baseline of the dynamics bench.
+round (down, or an endpoint churned out) AND transfers whose receiver
+churns out at t+1 — the arrival round — are lost in transit. Plan-once
+and predictive plans are realized this way; oracle GREEDY plans pass
+through unchanged because ``greedy_linear`` is receiver-aware (convex
+plans price per-round adjacency only and may shed receiver-side
+shares at realization).
 
 All solvers return a :class:`MovementPlan`. Its core is SPARSE: a
 COO-style edge list ``(t, src, dst, qty)`` holding only realized
@@ -227,6 +231,18 @@ class MovementPlan:
                 f"offload over missing link at round {t}"
 
 
+def plans_equal(p: MovementPlan, q: MovementPlan) -> bool:
+    """Bitwise plan equality: COO edges and the discard vector. The
+    single guard behind the benches' "modes coincide bitwise" rows and
+    the representation-equivalence tests — grow it alongside
+    MovementPlan so every guard stays honest."""
+    e, f = p.edges, q.edges
+    return (np.array_equal(e.t, f.t) and np.array_equal(e.src, f.src)
+            and np.array_equal(e.dst, f.dst)
+            and np.array_equal(e.qty, f.qty)
+            and np.array_equal(p.r, q.r))
+
+
 def no_movement_plan(T: int, n: int) -> MovementPlan:
     """Setting A: offloading and discarding disabled (G_i = D_i)."""
     tt = np.repeat(np.arange(T, dtype=np.int64), n)
@@ -280,6 +296,13 @@ def greedy_linear(traces: CostTraces, adj, *,
     backend: "numpy" (vectorized, default), "jnp" / "pallas" (device
     batched kernel via ``kernels.ops.greedy_decision_batched``), or
     "auto" (pallas on accelerators when n ≥ PALLAS_MIN_N and tileable).
+
+    Receiver-side awareness: when the schedule carries a non-trivial
+    active trace, data offloaded at t is processed by the receiver at
+    t+1 — so devices inactive at t+1 leave the round-t candidate set
+    (their arrivals would be lost in transit; see ``realize_plan``).
+    Schedules without churn (raw matrices, stacks, constant/flap
+    schedules) are bitwise unaffected.
     """
     T, n = traces.c_node.shape
     sched = as_schedule(adj, T)
@@ -293,19 +316,25 @@ def greedy_linear(traces: CostTraces, adj, *,
     # materializes the (T, n, n) effective-cost tensor (fresh-page writes
     # dominate wall time at fog scale), and the buffer stays cache-hot
     static = sched.static_adj
+    act = sched.activity()
+    inact = ~act if not act.all() else None  # receiver churn, any storage
+    per_round = static is None or inact is not None
     c_next = np.concatenate([traces.c_node[1:], traces.c_node[-1:]])
     dg = np.arange(n)
     eye = np.eye(n, dtype=bool)
-    invalid = None if static is None else ~static | eye
-    inv_buf = np.empty((n, n), bool) if static is None else None
+    invalid = None if per_round else ~static | eye
+    inv_buf = np.empty((n, n), bool) if per_round else None
     k = np.zeros((T, n), np.int64)
     off_cost = np.full((T, n), np.inf)   # T-1: no off-horizon offloading
     buf = np.empty((n, n))
     for t in range(T - 1):
         np.add(traces.c_link[t], c_next[t][None, :], out=buf)
         if invalid is None:              # time-varying graph, reuse bufs
-            np.logical_not(sched.adj_at(t), out=inv_buf)
+            np.logical_not(static if static is not None
+                           else sched.adj_at(t), out=inv_buf)
             np.logical_or(inv_buf, eye, out=inv_buf)
+            if inact is not None:        # receiver gone at arrival t+1
+                np.logical_or(inv_buf, inact[t + 1][None, :], out=inv_buf)
             buf[inv_buf] = np.inf
         else:
             buf[invalid] = np.inf
@@ -323,6 +352,9 @@ def _greedy_linear_device(traces: CostTraces, adj, *,
     T, n = traces.c_node.shape
     adj3 = np.array(_adj_t(adj, T), dtype=bool)   # kernel-side copy
     adj3[T - 1] = False    # no off-horizon offloading in the final round
+    act = as_schedule(adj, T).activity()
+    if not act.all():      # receivers gone at arrival t+1 leave the set
+        adj3[:T - 1] &= act[1:, None, :]
     c_next = np.concatenate([traces.c_node[1:], traces.c_node[-1:]])
     # device-side COO emission: fixed-shape (T·n,) edge arrays from the
     # kernel, packed into the sparse plan without a dense (T, n, n) stop
@@ -584,14 +616,25 @@ def repair_capacities_loop(plan: MovementPlan, traces: CostTraces,
 def realize_plan(plan: MovementPlan, schedule) -> MovementPlan:
     """Confront a plan with the network that actually materialized.
 
-    Offload edges whose link is absent at their round — flapped down,
-    or an endpoint churned out under a masked schedule — lose their
-    data in transit: the share moves to the discard vector (the data
-    plane never delivers it, so its cost is the discard error, not a
-    transfer). A plan solved against the schedule itself passes through
-    unchanged; this is the "plan-once" baseline of the
-    ``network_dynamics`` bench, quantifying what ignoring dynamics
-    costs."""
+    Two loss channels, both charged to the discard vector (the data
+    plane never delivers the share, so its cost is the discard error,
+    not a transfer):
+
+    * **send-side** — the link is absent at the edge's round (flapped
+      down, or an endpoint churned out under a masked schedule);
+    * **receiver-side** — the link was up at t but the RECEIVER churns
+      out by t+1, the round its arrivals would be processed: the data
+      is lost in transit with the exiting node.
+
+    A GREEDY plan solved against the schedule itself passes through
+    unchanged (``greedy_linear`` is receiver-aware); a convex plan may
+    shed small shares receiver-side even when solved on the true
+    schedule — ``solve_convex`` prices per-round adjacency only, so
+    realization is what brings its accounting back to what the data
+    plane delivers. A static schedule is a bitwise pass-through for
+    any plan. This is how every scheduled plan is brought back to the
+    TRUE network in the ``network_dynamics`` / ``network_prediction``
+    benches."""
     T, n = plan.r.shape
     sched = as_schedule(schedule, T)
     e = plan.edges
@@ -606,6 +649,9 @@ def realize_plan(plan: MovementPlan, schedule) -> MovementPlan:
             continue
         a = np.asarray(sched.adj_at(t), bool)
         lost = off & ~a[src, dst]
+        if t + 1 < T:                    # arrival round: receiver gone
+            act_next = np.asarray(sched.active_at(t + 1), bool)
+            lost |= off & ~act_next[dst]
         if lost.any():
             np.add.at(r[t], src[lost], qty[lost])
             keep[np.arange(sp[t], sp[t + 1])[lost]] = False

@@ -116,6 +116,38 @@ class NetworkSchedule:
                    link_events=tuple(events), active=active)
 
     @classmethod
+    def piecewise(cls, adjs, bounds, *, active=None) -> "NetworkSchedule":
+        """Piecewise-constant from per-window (n, n) adjacencies.
+
+        ``bounds`` are half-open ``(start, stop)`` round ranges (e.g.
+        :func:`repro.core.estimator.window_bounds`); window w uses
+        ``adjs[w]``. Stored as ``adjs[0]`` plus link events at each
+        window boundary — O(n² + E) memory, never O(T·n²). This is the
+        storage of predicted schedules (``estimator.predict_schedule``);
+        a prediction that never changes collapses to a constant
+        schedule (zero-copy fast path through the movement solvers)."""
+        if len(adjs) != len(bounds) or not bounds:
+            raise ValueError(f"{len(adjs)} window adjacencies for "
+                             f"{len(bounds)} bounds")
+        base = np.asarray(adjs[0], bool)
+        T = int(bounds[-1][1])
+        events = []
+        prev = base
+        for (a, _), adj in zip(bounds[1:], adjs[1:]):
+            cur = np.asarray(adj, bool)
+            for i, j in zip(*np.nonzero(cur & ~prev)):
+                events.append(NetEvent(int(a), "link_up", int(i), int(j)))
+            for i, j in zip(*np.nonzero(prev & ~cur)):
+                events.append(NetEvent(int(a), "link_down", int(i),
+                                       int(j)))
+            prev = cur
+        if not events and (active is None
+                           or np.asarray(active, bool).all()):
+            return cls.constant(base, T)
+        return cls(T, base.shape[0], base_adj=base,
+                   link_events=tuple(events), active=active)
+
+    @classmethod
     def masked(cls, base_adj, active, *,
                initial_active=None) -> "NetworkSchedule":
         """Node entry/exit: per-round adjacency is the base with every

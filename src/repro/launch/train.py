@@ -55,7 +55,7 @@ def solve_setting(setting: str, traces, adj, D, error_model="discard"):
         traces = with_capacity(traces, float(D.mean()))
     tr = traces
     if setting in ("C", "E"):
-        tr = est.estimate_traces(traces, L=5)
+        tr = est.estimate_traces(traces)
     if error_model == "discard":
         plan = mv.greedy_linear(tr, adj)
     else:
@@ -97,14 +97,26 @@ def run_fog(args) -> dict:
                              p_flap=args.p_flap, p_recover=args.p_recover,
                              tau=cfg.tau)
     dynamic = schedule.static_adj is None
-    # schedule-aware planning (replan-on-event) unless --plan-once;
-    # plan-once solves on the base graph and the plan is then realized
-    # against the schedule: in-flight data over dead links is lost
-    plan_network = schedule if (dynamic and not args.plan_once) else adj
+    # what the planner sees (--replan): the true schedule ("oracle",
+    # replan-on-event), the schedule predicted from the observed
+    # history ("predict", setting-C imperfect information applied to
+    # the network itself), or the static base graph ("once" /
+    # --plan-once). Execution and costing always run on the TRUE
+    # schedule: predictive and plan-once plans are realized against it
+    # — data over dead links or toward churned-out receivers is lost
+    if args.plan_once and args.replan not in ("oracle", "once"):
+        raise SystemExit(f"--plan-once conflicts with --replan "
+                         f"{args.replan}; drop one of the two")
+    replan = "once" if args.plan_once else args.replan
+    if not dynamic:
+        replan = "oracle"                # static network: modes coincide
+    plan_network = (schedule if replan == "oracle" else
+                    est.predict_schedule(schedule)
+                    if replan == "predict" else adj)
     plan = solve_setting(args.setting, traces, plan_network, D,
                          error_model=args.error_model)
-    if dynamic and args.plan_once:
-        plan = mv.realize_plan(plan, schedule)
+    if dynamic:
+        plan = mv.realize_plan(plan, schedule)   # no-op for oracle greedy
     from repro.core.engine import resolve_engine
 
     engine = resolve_engine(args.engine)
@@ -113,8 +125,7 @@ def run_fog(args) -> dict:
                                engine=engine)
     cost = mv.plan_cost(plan, traces, D, error_model=args.error_model)
     out = {"mode": "fog", "setting": args.setting, "engine": engine,
-           "schedule": sched_kind,
-           "replan": bool(dynamic and not args.plan_once),
+           "schedule": sched_kind, "replan": replan,
            "n_events": len(schedule.events_in(0, cfg.T)),
            "final_acc": hist["test_acc"][-1] if hist["test_acc"] else None,
            "acc_curve": hist["test_acc"], "cost": cost,
@@ -266,10 +277,19 @@ def main(argv=None):
                     help="per-round link failure prob (--schedule flap)")
     ap.add_argument("--p-recover", type=float, default=0.5,
                     help="per-round failed-link recovery prob")
+    ap.add_argument("--replan", default="oracle",
+                    choices=["oracle", "predict", "once"],
+                    help="what the planner sees under a dynamic "
+                         "schedule: the true schedule (oracle, "
+                         "replan-on-event), the schedule predicted "
+                         "from the observed event history "
+                         "(estimator.predict_schedule — deployable "
+                         "setting-C style), or the static base graph "
+                         "(once). Execution always runs on truth")
     ap.add_argument("--plan-once", action="store_true",
-                    help="plan on the base graph and realize against "
-                         "the schedule (in-flight data over dead links "
-                         "is lost) instead of schedule-aware replanning")
+                    help="alias for --replan once (plan on the base "
+                         "graph; realization loses in-flight data over "
+                         "dead links / churned-out receivers)")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "scan", "sharded", "legacy"],
                     help="fog training engine: one compiled scan, the "

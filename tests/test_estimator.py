@@ -1,0 +1,144 @@
+"""Estimator correctness: the L > T NaN bug (window clamping +
+empty-window backfill), edge cases (L = 1, all-inf capacities,
+zero-size D), and the plan-on-estimates / execute-on-truth repair
+parity between ``benchmarks.fog.make_plan`` and
+``launch.train.solve_setting`` (Table III: setting E repairs against
+the TRUE arrivals)."""
+import numpy as np
+
+from repro.core import estimator as est
+from repro.core import movement as mv
+from repro.core.costs import synthetic_costs, with_capacity
+from repro.core.topology import make_topology
+
+
+# -- window clamping / backfill ---------------------------------------------
+
+
+def test_window_bounds_clamped_to_horizon():
+    bounds = est.window_bounds(3, 5)
+    assert len(bounds) == 3                   # min(L, T) windows
+    assert bounds[0][0] == 0 and bounds[-1][1] == 3
+    assert all(b > a for a, b in bounds)      # every window non-empty
+    # contiguous cover of [0, T)
+    assert all(bounds[i][1] == bounds[i + 1][0]
+               for i in range(len(bounds) - 1))
+    assert est.window_bounds(4, 1) == [(0, 4)]
+    assert est.window_bounds(0, 5) == []
+
+
+def test_window_avg_L_gt_T_no_nan():
+    # the confirmed repro: empty linspace windows made NaN estimate rows
+    out = est._window_avg(np.ones((3, 2)), 3, 5, 0.5)
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out[0], 0.5)   # window 0: the prior
+    np.testing.assert_allclose(out[1:], 1.0)  # previous-window means
+
+
+def test_estimate_traces_L_gt_T_finite():
+    tr = synthetic_costs(4, 2, np.random.default_rng(0))
+    hat = est.estimate_traces(tr, L=5)
+    for arr in (hat.c_node, hat.c_link, hat.f_err, hat.cap_node):
+        assert not np.isnan(arr).any()
+    # round 1 sees round 0 (two windows of one round each)
+    np.testing.assert_allclose(hat.c_node[1], tr.c_node[0])
+
+
+def test_estimate_counts_L_gt_T_and_zero_size():
+    D = np.arange(4, dtype=float).reshape(2, 2)
+    Dh = est.estimate_counts(D, L=9)
+    assert np.isfinite(Dh).all() and Dh.shape == D.shape
+    np.testing.assert_allclose(Dh[1], D[0])
+    empty = est.estimate_counts(np.empty((0, 4)), L=5)
+    assert empty.shape == (0, 4)
+
+
+def test_estimate_traces_single_window_is_prior():
+    tr = synthetic_costs(3, 6, np.random.default_rng(1))
+    hat = est.estimate_traces(tr, L=1, prior=0.25)
+    assert np.all(hat.c_node == 0.25) and np.all(hat.c_link == 0.25)
+
+
+def test_estimate_traces_all_inf_capacity_stays_inf():
+    tr = synthetic_costs(3, 8, np.random.default_rng(2))   # cap = inf
+    assert np.isinf(tr.cap_node).all()
+    hat = est.estimate_traces(tr, L=4)
+    assert np.isinf(hat.cap_node).all()
+    assert not np.isnan(hat.cap_node).any()
+
+
+def test_estimator_unchanged_on_regular_windows():
+    # the pre-fix semantics must survive the clamp for L <= T
+    rng = np.random.default_rng(0)
+    tr = synthetic_costs(4, 20, rng)
+    hat = est.estimate_traces(tr, L=4)
+    np.testing.assert_allclose(hat.c_node[7], tr.c_node[0:5].mean(0))
+    assert np.all(hat.c_node[0] == 0.5)
+
+
+# -- setting-E repair executes on the true arrivals -------------------------
+
+
+def _tight_setup(n=8, T=10, seed=3):
+    rng = np.random.default_rng(seed)
+    tr = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=0.6)
+    # spiky arrivals so the window-averaged estimate under-predicts the
+    # peaks — repairing against the estimate would let violations pass
+    D = rng.poisson(10, (T, n)).astype(float)
+    D[::3] *= 4.0
+    tr = with_capacity(tr, float(D.mean()), float(D.mean()) / 2)
+    return tr, adj, D
+
+
+def test_make_plan_repairs_on_true_counts():
+    from benchmarks.fog import make_plan
+
+    tr, adj, D = _tight_setup()
+    plan = make_plan("E", tr, adj, D)
+    # capacities hold under the TRUE arrivals, not just the estimate
+    G = plan.processed(D)
+    assert np.all(G <= tr.cap_node + 1e-6)
+    t_, s_, d_, q_ = (plan.edges.t, plan.edges.src, plan.edges.dst,
+                      plan.edges.qty)
+    off = s_ != d_
+    assert np.all(q_[off] * D[t_[off], s_[off]]
+                  <= tr.cap_link[t_[off], s_[off], d_[off]] + 1e-6)
+    # bitwise: the plan is the estimate-planned greedy repaired on true D
+    want = mv.repair_capacities(
+        mv.greedy_linear(est.estimate_traces(tr, L=5), adj), tr, adj, D)
+    assert mv.plans_equal(plan, want)
+
+
+def test_make_plan_solve_setting_parity_setting_E():
+    """benchmarks.fog.make_plan and launch.train.solve_setting are two
+    call sites of the same Table-III recipe — setting E must produce
+    the same plan from the same inputs (solve_setting applies the
+    capacity model itself; make_plan takes it pre-applied)."""
+    from benchmarks.fog import make_plan
+    from repro.launch.train import solve_setting
+
+    rng = np.random.default_rng(5)
+    n, T = 8, 10
+    tr_raw = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=0.6)
+    D = rng.poisson(12, (T, n)).astype(float)
+    D[::3] *= 3.0
+    tr_cap = with_capacity(tr_raw, float(D.mean()))
+    p_bench = make_plan("E", tr_cap, adj, D)
+    p_launch = solve_setting("E", tr_raw, adj, D)
+    assert mv.plans_equal(p_bench, p_launch)
+
+
+def test_scenario_plans_repair_on_true_counts():
+    """solve_scenario_plans must enforce the same execute-on-truth
+    repair as make_plan (it used to repair on the estimated counts)."""
+    from benchmarks.fog import Scenario, make_plan, solve_scenario_plans
+    from repro.core import federated as F
+
+    tr, adj, D = _tight_setup(seed=9)
+    T, n = D.shape
+    sc = Scenario(key={}, cfg=F.FedConfig(n=n, T=T), traces=tr, adj=adj,
+                  D=D, streams=None, setting="E", error_model="discard")
+    (plan,) = solve_scenario_plans([sc])
+    assert mv.plans_equal(plan, make_plan("E", tr, adj, D))

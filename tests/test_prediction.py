@@ -1,0 +1,267 @@
+"""The prediction plane: window-averaged schedule estimation
+(``estimator.predict_schedule``), receiver-aware greedy planning,
+receiver-side arrival realization in ``realize_plan`` and the
+oracle/predict/once replan modes of the Scenario layer."""
+import numpy as np
+import pytest
+
+from repro.core import estimator as est
+from repro.core import movement as mv
+from repro.core.costs import synthetic_costs
+from repro.core.schedule import NetworkSchedule
+from repro.core.topology import (churn_schedule, fully_connected,
+                                 link_flap_schedule, make_topology)
+
+
+def _recv_churn_setup():
+    """Node 0 must offload; node 1 is the cheap target but churns out
+    at t=1 — its round-0 arrivals would be lost in transit."""
+    n, T = 3, 3
+    tr = synthetic_costs(n, T, np.random.default_rng(0))
+    tr.c_node[:] = np.array([50.0, 0.1, 0.2])[None]
+    tr.c_link[:] = 0.1
+    tr.f_err[:] = 100.0
+    adj = fully_connected(n)
+    active = np.ones((T, n), bool)
+    active[1, 1] = False
+    return tr, adj, NetworkSchedule.masked(adj, active)
+
+
+# ---------------------------------------------------------------------------
+# predict_schedule
+# ---------------------------------------------------------------------------
+
+
+def test_predict_constant_schedule_is_constant_and_bitwise():
+    adj = fully_connected(9)
+    T = 16
+    pred = est.predict_schedule(NetworkSchedule.constant(adj, T), L=4)
+    assert pred.static_adj is not None          # collapses to constant
+    np.testing.assert_array_equal(pred.static_adj, adj)
+    assert pred.activity().all()
+    tr = synthetic_costs(9, T, np.random.default_rng(1))
+    assert mv.plans_equal(mv.greedy_linear(tr, adj),
+                          mv.greedy_linear(tr, pred))
+
+
+def test_predict_threshold_semantics():
+    """Window l predicts from window l−1's observed rates; window 0 from
+    the round-0 truth. Rates below 0.5 vote absent."""
+    n, T, L = 4, 12, 3                       # windows (0,4) (4,8) (8,12)
+    adj = fully_connected(n)
+    active = np.ones((T, n), bool)
+    active[4:7, 2] = False                   # window-1 rate for node 2: .25
+    sched = NetworkSchedule.masked(adj, active)
+    pred = est.predict_schedule(sched, L=L)
+    # window 0 + 1: predicted from all-active history -> full network
+    for t in (0, 5):
+        np.testing.assert_array_equal(pred.adj_at(t), adj)
+        assert pred.active_at(t).all()
+    # window 2: node 2 was up 1/4 of window 1 -> predicted gone
+    a = np.asarray(pred.adj_at(9), bool)
+    assert not a[2].any() and not a[:, 2].any()
+    keep = [0, 1, 3]
+    np.testing.assert_array_equal(a[np.ix_(keep, keep)],
+                                  adj[np.ix_(keep, keep)])
+    assert not pred.active_at(9)[2] and pred.active_at(9)[[0, 1, 3]].all()
+
+
+def test_predict_expected_mode_keeps_support():
+    """mode="expected" plans against anything observed at all in the
+    previous window (optimistic support; realization pays the loss)."""
+    n, T, L = 4, 12, 3
+    adj = fully_connected(n)
+    active = np.ones((T, n), bool)
+    active[4:7, 2] = False
+    sched = NetworkSchedule.masked(adj, active)
+    pred = est.predict_schedule(sched, L=L, mode="expected")
+    a = np.asarray(pred.adj_at(9), bool)     # rate .25 > 0 -> kept
+    np.testing.assert_array_equal(a, adj)
+    assert pred.active_at(9).all()
+    with pytest.raises(ValueError):
+        est.predict_schedule(sched, L=L, mode="bogus")
+
+
+def test_predict_flap_schedule_within_reason():
+    adj = make_topology("random", 10, np.random.default_rng(0), rho=0.6)
+    sched = link_flap_schedule(adj, 20, np.random.default_rng(3),
+                               p_down=0.15)
+    pred = est.predict_schedule(sched, L=5)
+    assert (pred.T, pred.n) == (20, 10)
+    # predictions never invent links outside the union support
+    support = np.zeros_like(adj)
+    for t in range(20):
+        support |= np.asarray(sched.adj_at(t), bool)
+    for t in range(20):
+        assert not (np.asarray(pred.adj_at(t), bool) & ~support).any()
+    acc = est.schedule_prediction_accuracy(pred, sched)
+    assert 0.0 < acc["link_accuracy"] <= 1.0
+
+
+def test_prediction_accuracy_counts_invented_links():
+    """Links the prediction asserts OUTSIDE the truth support are
+    errors — the union support must see them (and an all-empty exact
+    prediction is perfect, not 0)."""
+    n, T = 3, 4
+    one_link = np.zeros((n, n), bool)
+    one_link[0, 1] = True
+    truth = NetworkSchedule.constant(one_link, T)
+    pred = NetworkSchedule.constant(fully_connected(n), T)
+    acc = est.schedule_prediction_accuracy(pred, truth)
+    assert acc["link_accuracy"] == pytest.approx(1 / 6)   # 1 of 6 right
+    empty = NetworkSchedule.constant(np.zeros((n, n), bool), T)
+    assert est.schedule_prediction_accuracy(empty, empty) == \
+        {"link_accuracy": 1.0, "activity_accuracy": 1.0}
+
+
+def test_piecewise_constructor_roundtrip():
+    rng = np.random.default_rng(2)
+    n = 5
+    bounds = [(0, 3), (3, 7), (7, 10)]
+    adjs = [rng.random((n, n)) < 0.5 for _ in bounds]
+    sched = NetworkSchedule.piecewise(adjs, bounds)
+    for w, (a, b) in enumerate(bounds):
+        for t in range(a, b):
+            np.testing.assert_array_equal(sched.adj_at(t), adjs[w])
+    # identical windows collapse to the zero-copy constant mode
+    const = NetworkSchedule.piecewise([adjs[0]] * 3, bounds)
+    assert const.static_adj is not None
+    with pytest.raises(ValueError):
+        NetworkSchedule.piecewise(adjs[:2], bounds)
+
+
+# ---------------------------------------------------------------------------
+# receiver-aware planning + receiver-side realization
+# ---------------------------------------------------------------------------
+
+
+def test_greedy_avoids_receiver_churning_out_at_arrival():
+    tr, adj, sched = _recv_churn_setup()
+    static_plan = mv.greedy_linear(tr, adj)
+    used = set(zip(static_plan.edges.t, static_plan.edges.src,
+                   static_plan.edges.dst))
+    assert (0, 0, 1) in used                 # cheapest target, statically
+    plan = mv.greedy_linear(tr, sched)
+    used = set(zip(plan.edges.t, plan.edges.src, plan.edges.dst))
+    assert (0, 0, 1) not in used             # 1 is gone at arrival t=1
+    assert (0, 0, 2) in used                 # next-best receiver instead
+    # and the oracle plan survives realization bit for bit
+    assert mv.plans_equal(mv.realize_plan(plan, sched), plan)
+
+
+def test_realize_plan_receiver_side_known_loss():
+    tr, adj, sched = _recv_churn_setup()
+    plan = mv.greedy_linear(tr, adj)         # static plan: 0 -> 1 at t=0
+    realized = mv.realize_plan(plan, sched)
+    # the 0->1 share at t=0 is lost in transit with node 1 at t=1
+    used = set(zip(realized.edges.t, realized.edges.src,
+                   realized.edges.dst))
+    assert (0, 0, 1) not in used
+    assert realized.r[0, 0] == pytest.approx(1.0)
+    assert plan.r[0, 0] == 0.0
+    # conservation still holds after the drop
+    total = realized.r.copy()
+    np.add.at(total, (realized.edges.t, realized.edges.src),
+              realized.edges.qty)
+    np.testing.assert_allclose(total, 1.0)
+
+
+def test_realize_plan_static_schedules_bitwise_passthrough():
+    rng = np.random.default_rng(4)
+    n, T = 8, 6
+    tr = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=0.6)
+    plan = mv.greedy_linear(tr, adj)
+    assert mv.plans_equal(
+        mv.realize_plan(plan, NetworkSchedule.constant(adj, T)), plan)
+    stack = np.broadcast_to(adj, (T, n, n)).copy()
+    assert mv.plans_equal(
+        mv.realize_plan(plan, NetworkSchedule.full(stack)), plan)
+
+
+def test_realize_plan_last_round_has_no_receiver_check():
+    """Offloads at T−1 arrive off-horizon: only the send-side link is
+    realized (nothing to process at T, consistent with processed())."""
+    n, T = 3, 2
+    adj = fully_connected(n)
+    active = np.ones((T, n), bool)
+    edges = mv.PlanEdges(t=np.array([1]), src=np.array([0]),
+                         dst=np.array([1]), qty=np.array([1.0]))
+    r = np.ones((T, n))
+    r[1, 0] = 0.0
+    plan = mv.MovementPlan(r=r, edges=edges, n=n)
+    sched = NetworkSchedule.masked(adj, active)
+    assert mv.plans_equal(mv.realize_plan(plan, sched), plan)
+
+
+# ---------------------------------------------------------------------------
+# Scenario replan modes
+# ---------------------------------------------------------------------------
+
+
+def _scenario(schedule, replan, n=10, T=10, seed=5):
+    from benchmarks.fog import Scenario
+    from repro.core import federated as F
+
+    rng = np.random.default_rng(seed)
+    tr = synthetic_costs(n, T, rng)
+    adj = make_topology("random", n, rng, rho=0.7)
+    D = rng.poisson(15, (T, n)).astype(float)
+    sched = schedule(adj, T) if callable(schedule) else schedule
+    return Scenario(key={}, cfg=F.FedConfig(n=n, T=T), traces=tr, adj=adj,
+                    D=D, streams=None, setting="B",
+                    error_model="discard", schedule=sched, replan=replan)
+
+
+def test_replan_mode_normalization():
+    from benchmarks.fog import replan_mode
+
+    assert replan_mode(True) == "oracle"
+    assert replan_mode(False) == "once"
+    assert replan_mode("predict") == "predict"
+    with pytest.raises(ValueError):
+        replan_mode("sometimes")
+
+
+def test_scenario_bool_replan_compat():
+    from benchmarks.fog import solve_scenario_plans
+
+    def churn(adj, T):
+        return churn_schedule(adj, T, 0.15, 0.15,
+                              np.random.default_rng(5), tau=5)
+
+    plans = solve_scenario_plans(
+        [_scenario(churn, m) for m in (True, "oracle", False, "once")])
+    assert mv.plans_equal(plans[0], plans[1])
+    assert mv.plans_equal(plans[2], plans[3])
+
+
+def test_scenario_modes_ordered_and_conserving():
+    from benchmarks.fog import solve_scenario_plans
+
+    def churn(adj, T):
+        return churn_schedule(adj, T, 0.2, 0.15,
+                              np.random.default_rng(6), tau=5)
+
+    scs = [_scenario(churn, m) for m in ("oracle", "predict", "once")]
+    plans = solve_scenario_plans(scs)
+    costs = {}
+    for sc, plan, mode in zip(scs, plans, ("oracle", "predict", "once")):
+        total = plan.r.copy()
+        np.add.at(total, (plan.edges.t, plan.edges.src), plan.edges.qty)
+        np.testing.assert_allclose(total, 1.0, atol=1e-6)
+        plan.check(sc.schedule)          # realized: valid on the truth
+        costs[mode] = mv.plan_cost(plan, sc.traces, sc.D)["total"]
+    # oracle plans on the true candidate set -> realized lower bound
+    assert costs["oracle"] <= costs["predict"] + 1e-9
+    assert costs["oracle"] <= costs["once"] + 1e-9
+
+
+def test_scenario_constant_schedule_modes_bitwise():
+    from benchmarks.fog import solve_scenario_plans
+
+    const = NetworkSchedule.constant  # (adj, T) signature matches
+    plans = solve_scenario_plans(
+        [_scenario(const, m) for m in ("oracle", "predict", "once")])
+    assert mv.plans_equal(plans[0], plans[1])
+    assert mv.plans_equal(plans[0], plans[2])
