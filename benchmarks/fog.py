@@ -142,7 +142,8 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
                   setting="B", error_model="sqrt", gamma=1.0,
                   medium="wifi", p_exit=0.0, p_entry=0.0, f_err=0.7,
                   dynamics=None, p_flap=0.05, p_recover=0.5,
-                  replan="oracle", seed=0) -> Scenario:
+                  replan="oracle", mean_per_round=None,
+                  seed=0) -> Scenario:
     """Build one sweep point (same setup recipe as ``fog_experiment``).
 
     ``dynamics``: None (auto: "churn" when p_exit/p_entry set, else
@@ -154,7 +155,9 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
     ``estimator.predict_schedule``), "once" on the static base graph;
     predictive and plan-once plans are then realized against the true
     schedule — in-flight data over dead links or toward churned-out
-    receivers is lost (``mv.realize_plan``).
+    receivers is lost (``mv.realize_plan``). ``mean_per_round``
+    overrides the Poisson arrival density (default |D|/(nT); the
+    paper's fog testbed runs at ~2 samples/device/round).
     """
     rng = np.random.default_rng(seed)
     data = dataset(scale.n_train, scale.n_test)
@@ -168,7 +171,8 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
         traces = synthetic_costs(n, scale.T, rng, f_err=f_err)
     adj = make_topology(topology, n, rng, rho=rho,
                         costs=traces.c_node.mean(0))
-    streams = pl.poisson_streams(n, scale.T, data[1], iid=iid, rng=rng)
+    streams = pl.poisson_streams(n, scale.T, data[1], iid=iid, rng=rng,
+                                 mean_per_round=mean_per_round)
     D = pl.counts(streams)
     if setting in ("D", "E"):
         traces = with_capacity(traces, float(D.mean()))
@@ -283,34 +287,81 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
     return plans
 
 
+def scenario_bucket_key(sc: Scenario, *, bucket: str = "pow2") -> tuple:
+    """The shape bucket a sweep point trains in: scenarios sharing this
+    key run through ONE compiled program of the batched engine (the
+    per-point sample budget P is bucketed inside the group)."""
+    T_, n = sc.D.shape
+    return (sc.cfg.model, sc.cfg.eta, sc.cfg.tau,
+            pl.bucket_rounds(T_, sc.cfg.tau, bucket),
+            pl.bucket_size(n, bucket,
+                           max_inflation=pl.BUCKET_MAX_INFLATION))
+
+
 def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
-                  train=True, engine="auto", iters=400, seed=0
-                  ) -> list[dict]:
+                  train=True, engine="auto", iters=400, seed=0,
+                  batch: bool | None = None, bucket: str = "pow2",
+                  plans: list | None = None, mesh="auto") -> list[dict]:
     """Solve + evaluate + (optionally) train a whole sweep.
 
-    Convex plans: one compiled program per (T, n) group. Training: the
-    engine dispatch of ``run_network_aware`` — "auto" resolves to
-    "sharded" on multi-device hosts (aggregation as cross-shard psum,
-    eval streamed off the hot path by the AsyncEvaluator), "scan"
-    otherwise.
+    Convex plans: one compiled program per (T, n) group. Training
+    defaults to the scenario-BATCHED engine: points are grouped into
+    shape buckets (:func:`scenario_bucket_key`) and every bucket trains
+    in ONE compiled program (``run_network_aware_batched`` — vmapped
+    scenario axis, sharded across the "data" mesh on multi-device
+    hosts, whole-bucket eval drained by one stacked AsyncEvaluator
+    dispatch). ``batch=False`` (or a per-point ``engine`` of
+    "scan"/"sharded"/"legacy") keeps the original per-point dispatch
+    loop — the oracle the batched path is equivalence-tested against.
+    ``plans`` short-circuits the solve (a bench that times both paths
+    hands the same plans to each). ``mesh``: "auto" shards the batched
+    path across all visible devices on multi-device hosts, ``None``
+    forces single-device programs, an explicit mesh is used as-is.
     """
     from repro.core.engine import resolve_engine
 
-    plans = solve_scenario_plans(scenarios, iters=iters, seed=seed)
-    engine = resolve_engine(engine or "auto")
+    if plans is None:
+        plans = solve_scenario_plans(scenarios, iters=iters, seed=seed)
     data = dataset(scale.n_train, scale.n_test)
+    if batch is None:
+        # explicit batch=False always wins (even with engine="batched",
+        # which then runs per point through the S=1 bucket program)
+        batch = engine in ("auto", "batched") and len(scenarios) > 1
+    hists: list = [None] * len(scenarios)
+    engine_name = ("batched" if batch
+                   else resolve_engine(engine or "auto"))
+    if train and batch:
+        groups: dict[tuple, list[int]] = {}
+        for b, sc in enumerate(scenarios):
+            groups.setdefault(scenario_bucket_key(sc, bucket=bucket),
+                              []).append(b)
+        for idxs in groups.values():
+            outs = F.run_network_aware_batched(
+                [scenarios[b].cfg for b in idxs], data,
+                [plans[b] for b in idxs],
+                streams=[scenarios[b].streams for b in idxs],
+                activities=[scenarios[b].activity for b in idxs],
+                schedules=[scenarios[b].schedule for b in idxs],
+                mesh=mesh, bucket=bucket)
+            for b, hist in zip(idxs, outs):
+                hists[b] = hist
+    elif train:
+        for b, (sc, plan) in enumerate(zip(scenarios, plans)):
+            hists[b] = F.run_network_aware(sc.cfg, data, sc.traces,
+                                           sc.adj, plan,
+                                           streams=sc.streams,
+                                           activity=sc.activity,
+                                           schedule=sc.schedule,
+                                           engine=engine_name,
+                                           mesh=None if mesh == "auto"
+                                           else mesh)
     rows = []
-    for sc, plan in zip(scenarios, plans):
+    for sc, plan, hist in zip(scenarios, plans, hists):
         cost = mv.plan_cost(plan, sc.traces, sc.D,
                             error_model=sc.error_model, gamma=sc.gamma)
         out = {**sc.key, "setting": sc.setting, "cost": cost,
-               "engine": engine}
-        if train:
-            hist = F.run_network_aware(sc.cfg, data, sc.traces, sc.adj,
-                                       plan, streams=sc.streams,
-                                       activity=sc.activity,
-                                       schedule=sc.schedule,
-                                       engine=engine)
+               "engine": engine_name}
+        if hist is not None:
             out.update(acc=hist["test_acc"][-1],
                        acc_curve=hist["test_acc"],
                        sim_before=hist["sim_before"],

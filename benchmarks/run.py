@@ -31,9 +31,39 @@ def bench(fn):
     return fn
 
 
+# XLA compile counter (jax.monitoring backend_compile events): stamped
+# into every bench JSON so recompilation regressions — a sweep that
+# suddenly compiles per point instead of per bucket — show up in the
+# artifact trajectory across PRs.
+_COMPILES = {"n": 0, "installed": False, "last_emit": 0}
+
+
+def _install_compile_counter() -> None:
+    if _COMPILES["installed"]:
+        return
+    import jax
+
+    def _on_event(name, *a, **kw):
+        if name == "/jax/core/compile/backend_compile_duration":
+            _COMPILES["n"] += 1
+
+    try:
+        jax.monitoring.register_event_duration_secs_listener(_on_event)
+        _COMPILES["installed"] = True
+    except Exception:
+        pass
+
+
+def compile_count() -> int:
+    """XLA compiles observed so far (0 until the counter installs)."""
+    _install_compile_counter()
+    return _COMPILES["n"]
+
+
 def _bench_meta() -> dict:
     """Provenance stamp so bench_*.json trajectories are comparable
-    across machines: git SHA, jax version, device kind and count."""
+    across machines: git SHA, jax version, device kind and count, and
+    the compile counters for recompilation-regression tracking."""
     import subprocess
 
     import jax
@@ -50,12 +80,16 @@ def _bench_meta() -> dict:
             "backend": jax.default_backend(),
             "device_kind": dev.device_kind,
             "device_count": jax.device_count(),
+            "compiles_total": compile_count(),
+            "compiles_during_bench": compile_count()
+            - _COMPILES["last_emit"],
             "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")}
 
 
 def _emit(name: str, seconds: float, derived: dict):
     os.makedirs(RESULTS, exist_ok=True)
     derived = {**derived, "meta": _bench_meta()}
+    _COMPILES["last_emit"] = compile_count()
     with open(os.path.join(RESULTS, f"bench_{name}.json"), "w") as f:
         json.dump(derived, f, indent=2, default=float)
     compact = json.dumps(derived.get("headline", derived),
@@ -790,6 +824,181 @@ def network_prediction(scale):
     _emit("prediction", time.time() - t0, derived)
 
 
+def _staged_bitwise_check(scenarios, plans, scale) -> bool:
+    """Rerun the per-point loop with every point's pad size pinned to
+    its bucket's P (apples-to-apples staging: identical padded shapes)
+    and assert the batched path's FULL histories — per-round device
+    losses, test losses/accuracies, H weights — are bitwise-identical
+    per scenario."""
+    import dataclasses as _dc
+
+    from repro.core import federated as F
+    from repro.data import pipeline as pl2
+
+    from benchmarks.fog import dataset, scenario_bucket_key
+
+    data = dataset(scale.n_train, scale.n_test)
+    groups: dict = {}
+    for b, sc in enumerate(scenarios):
+        groups.setdefault(scenario_bucket_key(sc), []).append(b)
+    ok = True
+    for idxs in groups.values():
+        # same capped policy as stage_scenario_batch, so the check
+        # certifies the staging the timed batched sweep actually ran
+        P_b = pl2.bucket_size(max(
+            F._prepare_streams(scenarios[b].cfg, data, plans[b],
+                               scenarios[b].streams,
+                               scenarios[b].activity,
+                               scenarios[b].schedule)[3]
+            for b in idxs), max_inflation=pl2.BUCKET_MAX_INFLATION)
+        cfgs = [_dc.replace(scenarios[b].cfg, max_points=P_b)
+                for b in idxs]
+        outs = F.run_network_aware_batched(
+            cfgs, data, [plans[b] for b in idxs],
+            streams=[scenarios[b].streams for b in idxs],
+            activities=[scenarios[b].activity for b in idxs],
+            schedules=[scenarios[b].schedule for b in idxs], mesh=None)
+        for cfg_b, b, hb in zip(cfgs, idxs, outs):
+            sc = scenarios[b]
+            hl = F.run_network_aware(cfg_b, data, sc.traces, sc.adj,
+                                     plans[b], streams=sc.streams,
+                                     activity=sc.activity,
+                                     schedule=sc.schedule, engine="scan")
+            ok &= (hl["agg_round"] == hb["agg_round"]
+                   and hl["test_acc"] == hb["test_acc"]
+                   and hl["test_loss"] == hb["test_loss"]
+                   and np.array_equal(np.stack(hl["device_loss"]),
+                                      np.stack(hb["device_loss"]))
+                   and np.array_equal(np.stack(hl["H_agg"]),
+                                      np.stack(hb["H_agg"])))
+    return bool(ok)
+
+
+@bench
+def scenario_batched(scale):
+    """Whole-sweep wall time + compile count: the scenario-batched
+    engine (every shape bucket trains in ONE compiled program, eval
+    drained by one stacked AsyncEvaluator dispatch) vs the per-point
+    engine-dispatch loop, on fig5-, dynamics- and prediction-shaped
+    grids. Both paths get the SAME precomputed plans, so the comparison
+    isolates training execution; cold timings include compilation (the
+    sweep cost a user pays on first shapes), warm timings are
+    steady-state repeats. RECORDS (the test suite is what asserts —
+    tests/test_engine_batched.py) whether the per-scenario accuracy
+    histories are bitwise-equal to the loop path and whether the
+    batched path compiled no more training programs than there are
+    shape buckets. Writes results/bench_scenarios.json.
+
+    Reading the rows: grids run sequentially in one process, so a
+    later grid's "cold" loop inherits programs the fig5 loop already
+    compiled (its loop_compiles column shows how cold it really was),
+    while the batched path still compiles that grid's bucket program —
+    small late grids therefore under-report the batched win. Warm
+    speedups < 1 on this serial-CPU container are the group-max P
+    padding (every point of a bucket runs at the bucket's padded
+    shapes); the scenario axis turns into real parallelism on
+    accelerators, and ragged buckets are the ROADMAP answer."""
+    from repro.core import engine as eng
+
+    from benchmarks.fog import (make_scenario, run_scenarios,
+                                scenario_bucket_key,
+                                solve_scenario_plans)
+
+    t0 = time.time()
+    # paper-density fog streams (~4 samples/device/round — the testbed
+    # regime whose per-point programs are small enough that compile /
+    # dispatch / transfer overheads dominate a sweep, per the ISSUE
+    # motivation; density-heavy sweeps shift toward FLOP parity and the
+    # batched win compresses to the compile savings)
+    density = dict(mean_per_round=4.0)
+    grids = {
+        # fig5 grid: 3 network sizes x 6 seeds (paper error bars) -> 3
+        # buckets; the loop compiles per point (distinct Poisson P per
+        # seed), the batched path once per bucket
+        "fig5": [dict(n=n, seed=s, iid=False, **density)
+                 for n in (5, 10, 20) for s in range(6)],
+        # dynamics-shaped: churn rates x replan-on-event vs plan-once
+        "dynamics": [dict(p_exit=r, p_entry=r, replan=rp, seed=7,
+                          **density)
+                     for r in (0.02, 0.1)
+                     for rp in ("oracle", "once")],
+        # prediction-shaped: three planner views of one churned network
+        "prediction": [dict(p_exit=0.05, p_entry=0.05, replan=m, seed=7,
+                            **density)
+                       for m in ("oracle", "predict", "once")],
+    }
+    rows = []
+    for gname, points in grids.items():
+        scenarios = [make_scenario(scale, key={"grid": gname, **pv},
+                                   error_model="discard", **pv)
+                     for pv in points]
+        plans = solve_scenario_plans(scenarios)
+        n_buckets = len({scenario_bucket_key(sc) for sc in scenarios})
+
+        c0, t = compile_count(), time.time()
+        loop = run_scenarios(scenarios, scale, plans=plans, batch=False,
+                             engine="auto")
+        loop_cold_s = time.time() - t
+        loop_compiles = compile_count() - c0
+
+        b0 = eng.batched_compile_count()
+        c0, t = compile_count(), time.time()
+        bat = run_scenarios(scenarios, scale, plans=plans,
+                            engine="batched")
+        bat_cold_s = time.time() - t
+        bat_compiles = compile_count() - c0
+        bat_train_programs = eng.batched_compile_count() - b0
+
+        t = time.time()
+        run_scenarios(scenarios, scale, plans=plans, batch=False,
+                      engine="auto")
+        loop_warm_s = time.time() - t
+        t = time.time()
+        run_scenarios(scenarios, scale, plans=plans, engine="batched")
+        bat_warm_s = time.time() - t
+
+        acc_bitwise = all(
+            lr["acc_curve"] == br["acc_curve"]
+            for lr, br in zip(loop, bat))
+        acc_gap = max(
+            max((abs(a - b) for a, b in
+                 zip(lr["acc_curve"], br["acc_curve"])), default=0.0)
+            for lr, br in zip(loop, bat))
+        # full histories (losses included) bitwise vs the loop run at
+        # the bucket's padded staging — the apples-to-apples identity
+        staged_bitwise = (_staged_bitwise_check(scenarios, plans, scale)
+                          if gname == "fig5" else None)
+        rows.append({
+            "grid": gname, "points": len(points),
+            "buckets": n_buckets,
+            "staged_histories_bitwise": staged_bitwise,
+            "loop_cold_s": loop_cold_s, "batched_cold_s": bat_cold_s,
+            "loop_warm_s": loop_warm_s, "batched_warm_s": bat_warm_s,
+            "speedup_cold": loop_cold_s / bat_cold_s,
+            "speedup_warm": loop_warm_s / bat_warm_s,
+            "loop_compiles": loop_compiles,
+            "batched_compiles": bat_compiles,
+            "batched_train_programs": bat_train_programs,
+            "train_programs_leq_buckets": bool(
+                bat_train_programs <= n_buckets),
+            "acc_curves_bitwise": bool(acc_bitwise),
+            "acc_curve_gap": acc_gap})
+    fig5 = rows[0]
+    derived = {"rows": rows, "headline": {
+        "fig5_speedup_cold": fig5["speedup_cold"],
+        "fig5_speedup_warm": fig5["speedup_warm"],
+        "fig5_loop_compiles": fig5["loop_compiles"],
+        "fig5_batched_compiles": fig5["batched_compiles"],
+        "fig5_buckets": fig5["buckets"],
+        "train_programs_leq_buckets": bool(all(
+            r["train_programs_leq_buckets"] for r in rows)),
+        "acc_curves_bitwise": bool(all(
+            r["acc_curves_bitwise"] for r in rows)),
+        "fig5_staged_histories_bitwise": fig5[
+            "staged_histories_bitwise"]}}
+    _emit("scenarios", time.time() - t0, derived)
+
+
 @bench
 def convex_batched(scale):
     """Batched (vmapped) convex movement sweep vs one-solve-per-point:
@@ -866,11 +1075,13 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
+    _install_compile_counter()
     scale = QUICK if args.quick else (FULL if args.full else DEFAULT)
-    names = (args.only.split(",") if args.only else list(_REGISTRY))
+    names = ([s.strip() for s in args.only.split(",") if s.strip()]
+             if args.only else list(_REGISTRY))
     print("name,us_per_call,derived")
     for name in names:
-        fn = _REGISTRY.get(name) or _REGISTRY.get(name.strip())
+        fn = _REGISTRY.get(name)
         if fn is None:
             raise SystemExit(f"unknown benchmark {name!r}; "
                              f"known: {sorted(_REGISTRY)}")

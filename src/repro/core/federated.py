@@ -85,6 +85,40 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     edit that slips past the checksum would train on stale pixels.
     """
     x_tr, y_tr, x_te, y_te = data
+    streams, processed, act_all, max_pts = _prepare_streams(
+        cfg, data, plan, streams, activity, schedule)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    w_global, apply_fn = make_model(cfg.model, key)
+
+    hist = _history_base(cfg, y_tr, streams, processed, act_all)
+
+    engine = eng.resolve_engine(engine)
+    runners = {"scan": eng.run_rounds_scan,
+               "sharded": functools.partial(eng.run_rounds_sharded,
+                                            mesh=mesh),
+               # engine="batched" uses the mesh as given — None is the
+               # single-device program (the bitwise twin of "scan");
+               # pass a mesh, or go through run_network_aware_batched
+               # (mesh="auto"), for the sharded composition
+               "batched": functools.partial(
+                   eng.run_rounds_batched_single, mesh=mesh),
+               "legacy": eng.run_rounds_legacy}
+    if engine not in runners:
+        raise ValueError(f"unknown engine {engine!r}; "
+                         f"expected one of {sorted(runners)} or 'auto'")
+    runner = runners[engine]
+    hist.update(runner(apply_fn, w_global, x_tr, y_tr, x_te, y_te,
+                       processed, act_all, cfg.tau, cfg.eta, max_pts))
+    return hist
+
+
+def _prepare_streams(cfg: FedConfig, data, plan, streams, activity,
+                     schedule):
+    """Host-side data-plane prep shared by the single and batched run
+    paths: default streams, schedule→activity, inactive-collection
+    zeroing, movement routing, pad sizing."""
+    _, y_tr, _, _ = data
     rng = np.random.default_rng(cfg.seed)
     if streams is None:
         streams = pl.poisson_streams(cfg.n, cfg.T, y_tr, iid=cfg.iid,
@@ -103,14 +137,17 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
             streams.collected[t][i] = np.empty(0, np.int64)
     processed = pl.apply_movement(streams, plan, rng)
     max_pts = pl.pad_size(processed, cfg.max_points)
+    act_all = (np.asarray(activity, bool) if activity is not None
+               else np.ones((cfg.T, cfg.n), bool))
+    return streams, processed, act_all, max_pts
 
-    key = jax.random.PRNGKey(cfg.seed)
-    w_global, apply_fn = make_model(cfg.model, key)
 
+def _history_base(cfg: FedConfig, y_tr, streams, processed,
+                  act_all) -> dict:
+    """History skeleton: rounds, Fig. 4b label-similarity diagnostics,
+    activity masks and processed counts (the engine fills the rest)."""
     hist = {"round": list(range(cfg.T)), "sim_before": None,
             "sim_after": None}
-
-    # data-similarity before/after movement (Fig. 4b), non-i.i.d. diagnostics
     col_labels = [np.concatenate([y_tr[ix] for row in streams.collected
                                   for ix in [row[i]]] or [np.empty(0, int)])
                   for i in range(cfg.n)]
@@ -119,25 +156,77 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                    for i in range(cfg.n)]
     hist["sim_before"] = pl.label_similarity(col_labels)
     hist["sim_after"] = pl.label_similarity(proc_labels)
-
-    act_all = (np.asarray(activity, bool) if activity is not None
-               else np.ones((cfg.T, cfg.n), bool))
     hist["active"] = [act_all[t].copy() for t in range(cfg.T)]
     hist["processed_counts"] = [[len(ix) for ix in processed[t]]
                                 for t in range(cfg.T)]
-
-    engine = eng.resolve_engine(engine)
-    runners = {"scan": eng.run_rounds_scan,
-               "sharded": functools.partial(eng.run_rounds_sharded,
-                                            mesh=mesh),
-               "legacy": eng.run_rounds_legacy}
-    if engine not in runners:
-        raise ValueError(f"unknown engine {engine!r}; "
-                         f"expected one of {sorted(runners)} or 'auto'")
-    runner = runners[engine]
-    hist.update(runner(apply_fn, w_global, x_tr, y_tr, x_te, y_te,
-                       processed, act_all, cfg.tau, cfg.eta, max_pts))
     return hist
+
+
+def run_network_aware_batched(cfgs: list[FedConfig], data,
+                              plans: list[mv.MovementPlan], *,
+                              streams: list | None = None,
+                              activities: list | None = None,
+                              schedules: list | None = None,
+                              mesh="auto", bucket: str = "pow2"
+                              ) -> list[dict]:
+    """Train a whole bucket of sweep points in ONE compiled program.
+
+    The batched counterpart of looping ``run_network_aware`` over a
+    sweep: per-scenario host prep (streams, schedule masking, movement
+    routing — identical code path, so the staged streams are
+    bitwise-identical to the loop) feeds
+    ``core.engine.run_rounds_batched``, which pads every point up to
+    the shared shape bucket and vmaps the scenario axis over one window
+    scan (sharded across the "data" mesh on multi-device hosts). All
+    scenarios must share the dataset, model, η and τ — group a
+    heterogeneous sweep into buckets first
+    (``benchmarks.fog.scenario_bucket_key``).
+
+    ``mesh="auto"`` shards the fog-device axis across all visible
+    devices on multi-device hosts; ``mesh=None`` forces the
+    single-device program; an explicit mesh is used as-is.
+
+    Returns one history dict per scenario, same contract as
+    ``run_network_aware``.
+    """
+    S = len(cfgs)
+    if not (S == len(plans)
+            and all(lst is None or len(lst) == S
+                    for lst in (streams, activities, schedules))):
+        raise ValueError("cfgs/plans/streams/activities/schedules must "
+                         "have one entry per scenario")
+    head = (cfgs[0].model, cfgs[0].eta, cfgs[0].tau)
+    for cfg in cfgs[1:]:
+        if (cfg.model, cfg.eta, cfg.tau) != head:
+            raise ValueError(
+                "a batched bucket must share (model, eta, tau); got "
+                f"{(cfg.model, cfg.eta, cfg.tau)} vs {head}")
+
+    x_tr, y_tr, x_te, y_te = data
+    pl.reset_padding_warnings()          # inflation warnings: once/sweep
+    processed_list, act_list, max_list, hists = [], [], [], []
+    for b, cfg in enumerate(cfgs):
+        st, processed, act_all, max_pts = _prepare_streams(
+            cfg, data, plans[b],
+            streams[b] if streams is not None else None,
+            activities[b] if activities is not None else None,
+            schedules[b] if schedules is not None else None)
+        processed_list.append(processed)
+        act_list.append(act_all)
+        max_list.append(max_pts)
+        hists.append(_history_base(cfg, y_tr, st, processed, act_all))
+
+    models = [make_model(cfg.model, jax.random.PRNGKey(cfg.seed))
+              for cfg in cfgs]
+    params_list = [params for params, _ in models]
+    apply_fn = models[0][1]
+    outs = eng.run_rounds_batched(
+        apply_fn, params_list, x_tr, y_tr, x_te, y_te, processed_list,
+        act_list, cfgs[0].tau, cfgs[0].eta, max_list, bucket=bucket,
+        mesh=mesh)
+    for hist, out in zip(hists, outs):
+        hist.update(out)
+    return hists
 
 
 def run_centralized(cfg: FedConfig, data, steps: int | None = None,

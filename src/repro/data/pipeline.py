@@ -161,13 +161,78 @@ def label_similarity(label_multisets: list[np.ndarray],
     return float(np.mean(sims)) if sims else 0.0
 
 
+# ---------------------------------------------------------------------------
+# shape buckets: pad dimensions up to coarse buckets so a sweep of nearby
+# shapes hits ONE compiled program per bucket instead of recompiling per
+# point (core.engine caches programs per (model, eta, staging, bucket))
+# ---------------------------------------------------------------------------
+
+# padding-inflation warnings are deduplicated per sweep, not emitted per
+# point: a 50-point sweep with one undersized bucket should warn once
+_PAD_WARNED: set = set()
+
+
+def reset_padding_warnings() -> None:
+    """Start a new sweep: padding-inflation warnings may fire again."""
+    _PAD_WARNED.clear()
+
+
+def _warn_once(key, msg: str) -> None:
+    if key not in _PAD_WARNED:
+        _PAD_WARNED.add(key)
+        warnings.warn(msg, stacklevel=3)
+
+
+# padded rounds/devices still execute their (zero-weight) compute, so
+# bucketing a dimension that would inflate it beyond this factor falls
+# back to the exact size: nearby shapes share a program, distant ones
+# pay a recompile instead of phantom FLOPs every round
+BUCKET_MAX_INFLATION = 4 / 3
+
+
+def bucket_size(value: int, bucket: str = "pow2", *,
+                max_inflation: float | None = None) -> int:
+    """Round a dimension up to its shape bucket.
+
+    ``bucket="pow2"`` rounds up to the next power of two (so nearby
+    shapes share a compiled program); ``"exact"`` is the identity.
+    ``max_inflation`` caps the padding: when the pow2 bucket would grow
+    the dimension beyond ``value * max_inflation`` the exact size is
+    kept (used for the compute-bearing n and T axes)."""
+    value = int(value)
+    if bucket == "exact":
+        return value
+    if bucket != "pow2":
+        raise ValueError(f"unknown bucket policy {bucket!r}; "
+                         "expected 'pow2' or 'exact'")
+    b = 1 << max(0, value - 1).bit_length()
+    if max_inflation is not None and b > value * max_inflation:
+        return value
+    return b
+
+
+def bucket_rounds(T: int, tau: int, bucket: str = "pow2") -> int:
+    """Bucket for the round axis: the WINDOW count (T/tau) is bucketed,
+    then scaled back by tau — so tau-aligned horizons (the common
+    same-T sweep) pad zero rounds while cross-T sweeps still share a
+    program per bucket. Padded windows train nothing but still execute,
+    so inflation beyond ``BUCKET_MAX_INFLATION`` keeps the exact window
+    count. Always a multiple of tau (the engines scan (T/tau, tau)
+    aggregation windows)."""
+    n_win = -(-int(T) // int(tau))
+    return bucket_size(n_win, bucket,
+                       max_inflation=BUCKET_MAX_INFLATION) * int(tau)
+
+
 def pad_size(processed: list[list[np.ndarray]],
-             requested: int = 0) -> int:
+             requested: int = 0, *, bucket: str = "exact") -> int:
     """P for padded batches: the post-movement per-device maximum.
 
     Offloading concentrates data, so sizing P from the *collected*
     streams (or a too-small user override) silently drops samples at the
-    receiving devices. A ``requested`` pad size only ever grows P."""
+    receiving devices. A ``requested`` pad size only ever grows P.
+    ``bucket="pow2"`` rounds the result up to its shape bucket (for the
+    batched sweep engine's program cache)."""
     post_max = max((len(ix) for row in processed for ix in row),
                    default=1) or 1
     if requested and requested < post_max:
@@ -175,16 +240,18 @@ def pad_size(processed: list[list[np.ndarray]],
             f"max_points={requested} is below the post-movement maximum "
             f"of {post_max} samples/device/round; padding to {post_max} "
             "to avoid dropping samples", stacklevel=2)
-    return max(requested, post_max)
+    return bucket_size(max(requested, post_max), bucket)
 
 
 def pad_batches(processed_t: list[np.ndarray], x: np.ndarray,
-                y: np.ndarray, max_points: int):
+                y: np.ndarray, max_points: int, *,
+                bucket: str = "exact"):
     """Stack per-device variable-size batches into padded arrays.
 
-    Returns (xb (n, P, ...), yb (n, P), w (n, P) weight mask)."""
+    Returns (xb (n, P, ...), yb (n, P), w (n, P) weight mask).
+    ``bucket="pow2"`` pads P up to its shape bucket first."""
     n = len(processed_t)
-    P = max_points
+    P = bucket_size(max_points, bucket)
     xb = np.zeros((n, P, *x.shape[1:]), x.dtype)
     yb = np.zeros((n, P), np.int32)
     w = np.zeros((n, P), np.float32)
@@ -229,3 +296,83 @@ def stage_rounds(processed: list[list[np.ndarray]], y: np.ndarray,
                 w[t, i, :k] = 1.0
             counts[t, i] = k
     return idx, yb, w, counts
+
+
+@dataclasses.dataclass
+class ScenarioBatch:
+    """S scenarios staged into ONE stacked, bucket-padded stream.
+
+    All arrays carry a leading scenario axis: ``idx``/``yb``/``w`` are
+    (S, T_b, n_b, P_b), ``counts``/``act`` are (S, T_b, n_b), ``is_agg``
+    is (S, T_b). ``T``/``n``/``P`` record each scenario's TRUE dims so
+    histories can be sliced back out of the padding; phantom rounds and
+    devices are inactive (act 0, counts 0, is_agg False) and train
+    nothing."""
+
+    idx: np.ndarray
+    yb: np.ndarray
+    w: np.ndarray
+    counts: np.ndarray
+    act: np.ndarray
+    is_agg: np.ndarray
+    T: list[int]
+    n: list[int]
+    P: list[int]
+    tau: int
+
+    @property
+    def dims(self) -> tuple[int, int, int, int]:
+        """(S, T_b, n_b, P_b) — the bucket the program compiles for."""
+        return self.idx.shape
+
+
+def stage_scenario_batch(processed_list: list[list[list[np.ndarray]]],
+                         y: np.ndarray,
+                         act_list: list[np.ndarray], tau: int, *,
+                         max_points: list[int] | None = None,
+                         bucket: str = "pow2") -> ScenarioBatch:
+    """Stage a whole sweep bucket for the batched engine.
+
+    Each scenario's (T_s, n_s, P_s) stream is padded up to the shared
+    shape bucket — the round axis via :func:`bucket_rounds` (window
+    count bucketed, always a tau multiple), the device and sample axes
+    via :func:`bucket_size` — and stacked on a leading scenario axis.
+    Warns ONCE per sweep (see :func:`reset_padding_warnings`) when the
+    bucket inflates a scenario's own sample budget P by more than 2x:
+    that is the signal to split the sweep into finer buckets."""
+    S = len(processed_list)
+    T_s = [len(p) for p in processed_list]
+    n_s = [len(p[0]) for p in processed_list]
+    P_s = [pad_size(p, (max_points or [0] * S)[b])
+           for b, p in enumerate(processed_list)]
+    T_b = max(bucket_rounds(T, tau, bucket) for T in T_s)
+    n_b = max(bucket_size(n, bucket,
+                          max_inflation=BUCKET_MAX_INFLATION)
+              for n in n_s)
+    # P buckets off the GROUP max (one program per bucket either way);
+    # the pow2 rounding buys cross-sweep cache hits, the cap keeps the
+    # padded per-round compute bounded like the n/T axes
+    P_b = bucket_size(max(P_s), bucket,
+                      max_inflation=BUCKET_MAX_INFLATION)
+    for b, P in enumerate(P_s):
+        if P_b > 2 * P:
+            _warn_once(
+                ("P_inflation", P_b),
+                f"shape bucket pads P={P} up to {P_b} (> 2x) for at "
+                "least one scenario of this sweep; split the sweep "
+                "into finer buckets if the padded compute shows up")
+    idx = np.zeros((S, T_b, n_b, P_b), np.int32)
+    yb = np.zeros((S, T_b, n_b, P_b), np.int32)
+    w = np.zeros((S, T_b, n_b, P_b), np.float32)
+    counts = np.zeros((S, T_b, n_b), np.float32)
+    act = np.zeros((S, T_b, n_b), np.float32)
+    is_agg = np.zeros((S, T_b), bool)
+    for b, processed in enumerate(processed_list):
+        T, n = T_s[b], n_s[b]
+        i_b, y_b, w_b, c_b = stage_rounds(processed, y, P_b)
+        idx[b, :T, :n], yb[b, :T, :n] = i_b, y_b
+        w[b, :T, :n], counts[b, :T, :n] = w_b, c_b
+        act[b, :T, :n] = np.asarray(act_list[b], np.float32)
+        is_agg[b, :T] = (np.arange(T) + 1) % tau == 0
+    return ScenarioBatch(idx=idx, yb=yb, w=w, counts=counts, act=act,
+                         is_agg=is_agg, T=T_s, n=n_s, P=P_s, tau=tau)

@@ -36,3 +36,12 @@ def make_data_mesh(data: int | None = None):
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
     """
     return jax.make_mesh((data or jax.device_count(),), ("data",))
+
+
+def data_mesh_for(n: int):
+    """1-D "data" mesh sized for a bucket of n fog devices: never wider
+    than n, so bucket-padding the device axis up to a mesh multiple
+    does not manufacture phantom-only shards when a sweep bucket is
+    narrower than the host (the batched engine pads n to a multiple of
+    the mesh extent)."""
+    return make_data_mesh(max(1, min(jax.device_count(), int(n))))

@@ -291,11 +291,16 @@ def main(argv=None):
                          "graph; realization loses in-flight data over "
                          "dead links / churned-out receivers)")
     ap.add_argument("--engine", default="auto",
-                    choices=["auto", "scan", "sharded", "legacy"],
+                    choices=["auto", "scan", "sharded", "batched",
+                             "legacy"],
                     help="fog training engine: one compiled scan, the "
                          "device-sharded scan (shard_map over a 'data' "
                          "mesh; auto picks it on multi-device hosts), "
-                         "or the legacy per-round oracle loop")
+                         "the scenario-batched bucket program (S=1 "
+                         "slice of the sweep engine, single-device; "
+                         "sweeps shard it via run_network_aware_"
+                         "batched), or the legacy per-round oracle "
+                         "loop")
     # lm
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--smoke", action="store_true", default=True)
