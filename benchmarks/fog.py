@@ -10,6 +10,7 @@ import functools
 import numpy as np
 
 from repro.core import estimator as est
+from repro.core import faults as fl
 from repro.core import federated as F
 from repro.core import movement as mv
 from repro.core.costs import (synthetic_costs, testbed_like_costs,
@@ -135,6 +136,12 @@ class Scenario:
     # graph; True/False are legacy aliases for oracle/once. Predictive
     # and plan-once plans are realized against the true schedule.
     replan: bool | str = "oracle"
+    # unannounced failures (core.faults.FaultSchedule): never visible
+    # to the planner — crash outages only enter at realization, and
+    # upload faults only inside the engine's guarded aggregation
+    faults: "fl.FaultSchedule | None" = None
+    guard: bool = True
+    quorum: float = 0.0
 
 
 def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
@@ -142,8 +149,9 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
                   setting="B", error_model="sqrt", gamma=1.0,
                   medium="wifi", p_exit=0.0, p_entry=0.0, f_err=0.7,
                   dynamics=None, p_flap=0.05, p_recover=0.5,
-                  replan="oracle", mean_per_round=None,
-                  seed=0) -> Scenario:
+                  replan="oracle", mean_per_round=None, faults=None,
+                  fault_rate=0.0, guard=True, quorum=0.0,
+                  corrupt_mode="nan", seed=0) -> Scenario:
     """Build one sweep point (same setup recipe as ``fog_experiment``).
 
     ``dynamics``: None (auto: "churn" when p_exit/p_entry set, else
@@ -158,6 +166,13 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
     receivers is lost (``mv.realize_plan``). ``mean_per_round``
     overrides the Poisson arrival density (default |D|/(nT); the
     paper's fog testbed runs at ~2 samples/device/round).
+
+    ``faults``/``fault_rate`` inject unannounced failures
+    (``core.faults.make_faults``: "straggle", "drop", "crash",
+    "corrupt" or "mixed" at ``fault_rate``) sampled from a SEPARATE
+    rng stream (seed + 7919), so a faulted sweep point shares streams,
+    costs and topology bitwise with its fault-free twin. ``guard``/
+    ``quorum``/``corrupt_mode`` configure the engine-side tolerance.
     """
     rng = np.random.default_rng(seed)
     data = dataset(scale.n_train, scale.n_test)
@@ -188,10 +203,14 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
     elif dynamics == "flap":
         schedule = link_flap_schedule(adj, scale.T, rng, p_down=p_flap,
                                       p_up=p_recover)
+    fault_sched = faults if isinstance(faults, fl.FaultSchedule) else \
+        fl.make_faults(faults, scale.T, n, scale.tau, rate=fault_rate,
+                       seed=seed + 7919, corrupt=corrupt_mode)
     return Scenario(key=dict(key or {}), cfg=cfg, traces=traces, adj=adj,
                     D=D, streams=streams, setting=setting,
                     error_model=error_model, gamma=gamma,
-                    schedule=schedule, replan=replan)
+                    schedule=schedule, replan=replan, faults=fault_sched,
+                    guard=guard, quorum=quorum)
 
 
 def _estimated(sc: Scenario):
@@ -282,7 +301,13 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
             # with make_plan and launch.train.solve_setting)
             plans[b] = mv.repair_capacities(plans[b], sc.traces,
                                             nets[b], sc.D)
-        if sc.schedule is not None:
+        if sc.faults is not None and sc.faults.has_crashes:
+            # the EXECUTED network also loses crashed nodes the planner
+            # never saw: in-transit shares toward a crashed receiver
+            # die through the same receiver-side machinery as churn
+            plans[b] = mv.realize_plan(
+                plans[b], sc.faults.compose(sc.schedule, adj=sc.adj))
+        elif sc.schedule is not None:
             plans[b] = mv.realize_plan(plans[b], sc.schedule)
     return plans
 
@@ -290,12 +315,19 @@ def solve_scenario_plans(scenarios: list[Scenario], *, iters=400,
 def scenario_bucket_key(sc: Scenario, *, bucket: str = "pow2") -> tuple:
     """The shape bucket a sweep point trains in: scenarios sharing this
     key run through ONE compiled program of the batched engine (the
-    per-point sample budget P is bucketed inside the group)."""
+    per-point sample budget P is bucketed inside the group). The fault
+    config is part of the key: guard/quorum are trace-time constants of
+    the bucket program, and fault-free points must keep tracing the
+    historical clean program (bitwise guarantee) rather than riding a
+    faulted bucket with identity views."""
     T_, n = sc.D.shape
     return (sc.cfg.model, sc.cfg.eta, sc.cfg.tau,
             pl.bucket_rounds(T_, sc.cfg.tau, bucket),
             pl.bucket_size(n, bucket,
-                           max_inflation=pl.BUCKET_MAX_INFLATION))
+                           max_inflation=pl.BUCKET_MAX_INFLATION),
+            sc.faults is not None,
+            bool(sc.guard) if sc.faults is not None else False,
+            float(sc.quorum) if sc.faults is not None else 0.0)
 
 
 def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
@@ -336,13 +368,20 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
             groups.setdefault(scenario_bucket_key(sc, bucket=bucket),
                               []).append(b)
         for idxs in groups.values():
+            fault_list = [scenarios[b].faults for b in idxs]
+            any_faults = any(f is not None for f in fault_list)
             outs = F.run_network_aware_batched(
                 [scenarios[b].cfg for b in idxs], data,
                 [plans[b] for b in idxs],
                 streams=[scenarios[b].streams for b in idxs],
                 activities=[scenarios[b].activity for b in idxs],
                 schedules=[scenarios[b].schedule for b in idxs],
-                mesh=mesh, bucket=bucket)
+                mesh=mesh, bucket=bucket,
+                faults=fault_list if any_faults else None,
+                # the bucket key groups by (guard, quorum), so the
+                # group's config is any member's config
+                guard=scenarios[idxs[0]].guard,
+                quorum=scenarios[idxs[0]].quorum)
             for b, hist in zip(idxs, outs):
                 hists[b] = hist
     elif train:
@@ -354,7 +393,10 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
                                            schedule=sc.schedule,
                                            engine=engine_name,
                                            mesh=None if mesh == "auto"
-                                           else mesh)
+                                           else mesh,
+                                           faults=sc.faults,
+                                           guard=sc.guard,
+                                           quorum=sc.quorum)
     rows = []
     for sc, plan, hist in zip(scenarios, plans, hists):
         cost = mv.plan_cost(plan, sc.traces, sc.D,
@@ -368,6 +410,10 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
                        sim_after=hist["sim_after"],
                        avg_active=float(np.mean([a.sum()
                                                  for a in hist["active"]])))
+            if sc.faults is not None:
+                out["fault_summary"] = sc.faults.summary()
+                out["quorum_skips"] = int(sum(
+                    not ok for ok in hist.get("agg_quorum_ok", [])))
         rows.append(out)
     return rows
 

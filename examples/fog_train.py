@@ -45,6 +45,17 @@ device-activity rates, the deployable setting-C analog), or ``once``
 runs on the true schedule — predictive and plan-once plans are
 realized against it, losing data in flight over dead links or toward
 receivers that churned out by the arrival round.
+
+Fault-injection knobs
+---------------------
+``--faults corrupt --fault-rate 0.1`` injects UNANNOUNCED failures the
+planner never sees (``repro.core.faults``): straggler upload misses,
+dropped uploads, crash-mid-window exits, corrupted (NaN/Inf or
+Byzantine-scaled) updates, or an even ``mixed`` blend. The engine
+survives them through guarded aggregation (finite-masking + survivor
+renormalization; ``--unguarded`` ablates it) and a ``--quorum``
+fraction below which a window's aggregation is skipped and the
+previous global carries forward.
 """
 import argparse
 import json
@@ -65,14 +76,24 @@ if __name__ == "__main__":
     ap.add_argument("--replan", default="oracle",
                     choices=["oracle", "predict", "once"])
     ap.add_argument("--plan-once", action="store_true")
+    ap.add_argument("--faults", default="none",
+                    choices=["none", "straggle", "drop", "crash",
+                             "corrupt", "mixed"])
+    ap.add_argument("--fault-rate", type=float, default=0.0)
+    ap.add_argument("--quorum", type=float, default=0.0)
+    ap.add_argument("--unguarded", action="store_true")
     args = ap.parse_args()
     argv = ["--mode", "fog", "--model", "cnn", "--setting", args.setting,
             "--costs", "testbed", "--engine", args.engine,
-            "--schedule", args.schedule, "--replan", args.replan]
+            "--schedule", args.schedule, "--replan", args.replan,
+            "--faults", args.faults, "--fault-rate", str(args.fault_rate),
+            "--quorum", str(args.quorum)]
     if args.churn:
         argv += ["--churn", str(args.churn)]
     if args.plan_once:
         argv.append("--plan-once")
+    if args.unguarded:
+        argv.append("--unguarded")
     if args.non_iid:
         argv.append("--non-iid")
     if args.full:

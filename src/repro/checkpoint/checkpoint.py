@@ -3,10 +3,23 @@
 Arrays are gathered to host (``jax.device_get``) and stored with dtype +
 shape; the tree structure is encoded by flattened key-paths so loading is
 resilient to dict ordering. bfloat16 round-trips via a uint16 view.
+
+``save`` is atomic (write-to-temp + ``os.replace``, fsync'd), so a
+snapshot interrupted mid-write — a SIGINT during ``launch/serve.py``,
+a crashed training run — never corrupts the previous checkpoint.
+Every checkpoint is stamped with provenance metadata (git SHA, jax
+version, save time) the way ``benchmarks/run.py`` stamps bench
+artifacts; caller metadata keys win on collision. ``restore`` validates
+the WHOLE tree against the template and reports every mismatched leaf
+path in one ``ValueError`` instead of failing deep inside
+``tree_flatten_with_path``.
 """
 from __future__ import annotations
 
+import datetime
+import functools
 import os
+import subprocess
 
 import jax
 import jax.numpy as jnp
@@ -32,34 +45,88 @@ def _decode_leaf(d) -> np.ndarray:
     return np.frombuffer(d["data"], np.dtype(dtype)).reshape(d["shape"])
 
 
+@functools.lru_cache(maxsize=1)
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _ckpt_meta() -> dict:
+    """Provenance stamp, mirroring ``_bench_meta`` in benchmarks."""
+    return {"git_sha": _git_sha(), "jax_version": jax.__version__,
+            "saved_at": datetime.datetime.now(
+                datetime.timezone.utc).isoformat()}
+
+
 def save(path: str, tree, metadata: dict | None = None) -> None:
+    """Atomically snapshot ``tree`` (+ provenance-stamped metadata)."""
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     payload = {
-        "meta": metadata or {},
+        "meta": {**_ckpt_meta(), **(metadata or {})},
         "leaves": {jax.tree_util.keystr(p): _encode_leaf(v)
                    for p, v in flat},
     }
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
-    os.replace(tmp, path)
+    try:
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        # a failed write must not leave a half-written temp behind —
+        # and must never touch the previous checkpoint at ``path``
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def restore(path: str, like):
-    """Restore into the structure of ``like`` (a template pytree)."""
+    """Restore into the structure of ``like`` (a template pytree).
+
+    Returns ``(tree, metadata)``. Raises one ``ValueError`` naming
+    EVERY leaf path that is missing from the checkpoint, absent from
+    the template, or mismatched in shape/dtype — so a stale snapshot
+    fails loudly at the boundary, not deep inside an engine trace."""
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
     leaves = payload["leaves"]
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    problems: list[str] = []
     out = []
     for p, tmpl in flat:
         key = jax.tree_util.keystr(p)
         if key not in leaves:
-            raise KeyError(f"checkpoint missing leaf {key}")
+            problems.append(f"{key}: missing from checkpoint")
+            out.append(tmpl)
+            continue
         arr = _decode_leaf(leaves[key])
         t_shape = tuple(getattr(tmpl, "shape", ()) or ())
+        t_dtype = np.result_type(tmpl) if not hasattr(tmpl, "dtype") \
+            else tmpl.dtype
         if tuple(arr.shape) != t_shape:
-            raise ValueError(f"{key}: shape {arr.shape} != template {t_shape}")
+            problems.append(
+                f"{key}: shape {tuple(arr.shape)} != template {t_shape}")
+        elif arr.dtype != t_dtype:
+            problems.append(
+                f"{key}: dtype {arr.dtype} != template {t_dtype}")
         out.append(jnp.asarray(arr))
+    template_keys = {jax.tree_util.keystr(p) for p, _ in flat}
+    for key in leaves:
+        if key not in template_keys:
+            problems.append(f"{key}: in checkpoint but not in template")
+    if problems:
+        raise ValueError(
+            f"checkpoint {path!r} does not match the restore template "
+            f"({len(problems)} mismatched leaf path(s)):\n  "
+            + "\n  ".join(problems))
     return jax.tree_util.tree_unflatten(treedef, out), payload["meta"]

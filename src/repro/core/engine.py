@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import collections
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -148,52 +149,138 @@ def _sync(W, w_global, active):
     return jax.tree_util.tree_map(s, W, w_global)
 
 
+def _finite_mask(W, batch_axes: int):
+    """1.0 where every parameter leaf of a device is finite — the
+    guarded-aggregation mask. ``batch_axes`` leading axes index the
+    device ((n, ...) on the scan path, (S, n, ...) on the batched
+    path). All-finite inputs produce an all-ones mask, and masking
+    with an all-ones mask is bitwise the identity, so the guard is an
+    exact no-op on clean uploads."""
+    ok = None
+    for p in jax.tree_util.tree_leaves(W):
+        sh = p.shape[:batch_axes]
+        fin = jnp.all(jnp.isfinite(p.reshape(sh + (-1,))), axis=-1)
+        ok = fin if ok is None else ok & fin
+    return ok.astype(jnp.float32)
+
+
+def _guarded_uploads(W, contributing, upl, cor, guard: bool,
+                     batch_axes: int):
+    """What the aggregator actually receives: device params scaled by
+    the per-link corruption multiplier, missing uploads masked out of
+    the contributing set, and — when ``guard`` — non-finite updates
+    finite-masked (with the H-weight total renormalizing over the
+    surviving set simply because the masked devices contribute zero H).
+    With identity fault views (upl == cor == 1) every step multiplies
+    by 1.0 or selects through an all-true mask, so the result is
+    bitwise-identical to the unguarded inputs."""
+    tree_map = jax.tree_util.tree_map
+    contributing = contributing * upl
+    Wu = tree_map(
+        lambda p: p * cor.reshape(cor.shape + (1,) * (p.ndim - batch_axes)),
+        W)
+    if guard:
+        ok = _finite_mask(Wu, batch_axes)
+        contributing = contributing * ok
+        # zero (not just de-weight) masked devices: NaN * 0 is NaN, so
+        # a poisoned leaf must never enter the reduction at all
+        Wu = tree_map(
+            lambda p: jnp.where(
+                ok.reshape(ok.shape + (1,) * (p.ndim - batch_axes)) > 0,
+                p, 0.0), Wu)
+    return Wu, contributing
+
+
 # ---------------------------------------------------------------------------
 # scan-compiled path
 # ---------------------------------------------------------------------------
 
 
+def _make_scan_body(apply_fn, vstep, prestage: bool, faults: bool,
+                    guard: bool, quorum: float, x_tr, x_te, y_te):
+    """The per-round scan body, shared by the monolithic program and
+    the window-chunked checkpoint driver (same closure -> same jaxpr ->
+    the chunked dispatches reproduce the monolithic scan bit for bit).
+    With ``faults`` the xs gain (upload_ok, corrupt) rows and the
+    aggregation runs guarded + quorum-gated; without, the trace is
+    exactly the historical clean program."""
+    tree_map = jax.tree_util.tree_map
+
+    def body(carry, xs):
+        W, wg, H, waiting = carry
+        if faults:
+            xb, idx, yb, w, cnt, a, agg, upl, cor = xs
+        else:
+            xb, idx, yb, w, cnt, a, agg = xs
+        if not prestage:
+            xb = jnp.take(x_tr, idx, axis=0)
+        active = a * (1.0 - waiting)
+        W, losses = vstep(W, xb, yb, w, active)
+        H = H + cnt * active
+
+        def do_agg(ops):
+            W, wg, H, waiting = ops
+            if faults:
+                Wu, contrib = _guarded_uploads(W, active, upl, cor,
+                                               guard, 1)
+                surv = contrib.sum()
+                qok = surv >= quorum * active.sum()
+                wg2 = aggregate(Wu, H, contrib, wg)
+                # quorum failed: the whole aggregation event is skipped
+                # — previous global carries forward, no sync, H keeps
+                # accumulating into the next window
+                wg2 = tree_map(lambda nw, old: jnp.where(qok, nw, old),
+                               wg2, wg)
+                W2 = _sync(W, wg2, (a > 0.5) & qok)
+                H2 = jnp.where(qok, jnp.zeros_like(H), H)
+                waiting2 = jnp.where(qok, 1.0 - a, waiting)
+            else:
+                wg2 = aggregate(W, H, active, wg)
+                W2 = _sync(W, wg2, a > 0.5)
+                H2 = jnp.zeros_like(H)
+                waiting2 = 1.0 - a
+            logits = apply_fn(wg2, x_te)
+            tl = mm.ce_loss(logits, y_te)
+            ta = mm.accuracy(logits, y_te)
+            out = (W2, wg2, H2, waiting2, tl, ta, H)
+            if faults:
+                out += (surv, qok.astype(jnp.float32))
+            return out
+
+        def skip(ops):
+            W, wg, H, waiting = ops
+            z = jnp.float32(0.0)
+            out = (W, wg, H, waiting, z, z, H)
+            if faults:
+                out += (z, jnp.float32(1.0))
+            return out
+
+        res = jax.lax.cond(agg, do_agg, skip, (W, wg, H, waiting))
+        W, wg, H, waiting = res[:4]
+        return (W, wg, H, waiting), (losses,) + res[4:]
+
+    return body
+
+
 @functools.lru_cache(maxsize=16)
-def _scan_program(apply_fn, eta: float, prestage: bool):
-    """One jitted program per (model, η, staging mode); the aggregation
-    schedule arrives as the traced ``is_agg`` round mask, so changing τ
-    does not recompile."""
+def _scan_program(apply_fn, eta: float, prestage: bool,
+                  faults: bool = False, guard: bool = False,
+                  quorum: float = 0.0):
+    """One jitted program per (model, η, staging mode, fault config);
+    the aggregation schedule arrives as the traced ``is_agg`` round
+    mask, so changing τ does not recompile. With ``faults=False`` the
+    trace (and therefore the bits) is the historical clean program."""
 
     vstep = jax.vmap(_device_step_fn(apply_fn, eta))
 
     def train(W0, wg0, x_tr, xb_all, idx_all, yb_all, w_all, counts,
-              act, is_agg, x_te, y_te):
+              act, is_agg, x_te, y_te, *fault_ops):
         n = counts.shape[1]
-
-        def body(carry, xs):
-            W, wg, H, waiting = carry
-            xb, idx, yb, w, cnt, a, agg = xs
-            if not prestage:
-                xb = jnp.take(x_tr, idx, axis=0)
-            active = a * (1.0 - waiting)
-            W, losses = vstep(W, xb, yb, w, active)
-            H = H + cnt * active
-
-            def do_agg(ops):
-                W, wg, H, waiting = ops
-                wg2 = aggregate(W, H, active, wg)
-                W2 = _sync(W, wg2, a > 0.5)
-                logits = apply_fn(wg2, x_te)
-                tl = mm.ce_loss(logits, y_te)
-                ta = mm.accuracy(logits, y_te)
-                return W2, wg2, jnp.zeros_like(H), 1.0 - a, tl, ta, H
-
-            def skip(ops):
-                W, wg, H, waiting = ops
-                z = jnp.float32(0.0)
-                return W, wg, H, waiting, z, z, H
-
-            W, wg, H, waiting, tl, ta, H_at = jax.lax.cond(
-                agg, do_agg, skip, (W, wg, H, waiting))
-            return (W, wg, H, waiting), (losses, tl, ta, H_at)
-
+        body = _make_scan_body(apply_fn, vstep, prestage, faults, guard,
+                               quorum, x_tr, x_te, y_te)
         carry0 = (W0, wg0, jnp.zeros(n, jnp.float32), jnp.zeros(n, jnp.float32))
         xs = (xb_all, idx_all, yb_all, w_all, counts, act, is_agg)
+        xs = xs + tuple(fault_ops)
         (_, wg, _, _), ys = jax.lax.scan(body, carry0, xs)
         return (wg,) + ys
 
@@ -201,13 +288,80 @@ def _scan_program(apply_fn, eta: float, prestage: bool):
     return jax.jit(train, donate_argnums=donate)
 
 
+@functools.lru_cache(maxsize=16)
+def _scan_chunk_program(apply_fn, eta: float, prestage: bool,
+                        faults: bool = False, guard: bool = False,
+                        quorum: float = 0.0):
+    """Window-chunked slice of ``_scan_program``: the SAME scan body
+    with the carry explicit in/out, so the checkpoint driver can
+    dispatch ``checkpoint_every`` windows at a time and snapshot the
+    carry at each boundary. Iterating the identical body over a sliced
+    round axis reproduces the monolithic scan bit for bit on CPU."""
+
+    vstep = jax.vmap(_device_step_fn(apply_fn, eta))
+
+    def train(carry, x_tr, xb_all, idx_all, yb_all, w_all, counts,
+              act, is_agg, x_te, y_te, *fault_ops):
+        body = _make_scan_body(apply_fn, vstep, prestage, faults, guard,
+                               quorum, x_tr, x_te, y_te)
+        xs = (xb_all, idx_all, yb_all, w_all, counts, act, is_agg)
+        xs = xs + tuple(fault_ops)
+        return jax.lax.scan(body, carry, xs)
+
+    return jax.jit(train)
+
+
+def _stage_fault_ops(faults, T: int, n: int, tau: int):
+    """Validate a FaultSchedule against the run dims and return the
+    device-staged (upload_ok, corrupt) operand pair."""
+    if (faults.T, faults.n) != (T, n):
+        raise ValueError(f"fault schedule is (T={faults.T}, n={faults.n})"
+                         f" but the run is (T={T}, n={n})")
+    if faults.tau != tau:
+        raise ValueError(f"fault schedule has tau={faults.tau} but the "
+                         f"run aggregates every tau={tau}")
+    upl, cor = faults.engine_arrays()
+    return jnp.asarray(upl), jnp.asarray(cor)
+
+
 def run_rounds_scan(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
-                    act_all, tau: int, eta: float, max_pts: int) -> dict:
-    """Train all T rounds in one compiled scan; returns history pieces."""
+                    act_all, tau: int, eta: float, max_pts: int, *,
+                    faults=None, guard: bool = True, quorum: float = 0.0,
+                    checkpoint_path: str | None = None,
+                    checkpoint_every: int = 1, resume: str | None = None,
+                    stop_after: int | None = None) -> dict:
+    """Train all T rounds in one compiled scan; returns history pieces.
+
+    ``faults`` — optional :class:`repro.core.faults.FaultSchedule`:
+    crash outages are ANDed into the staged activity and the
+    (upload_ok, corrupt) views ride the scan as extra operands, with
+    the aggregation guarded (``guard`` finite-masking + H-weight
+    renormalization over survivors) and quorum-gated (``quorum`` —
+    windows whose surviving-upload fraction falls below it skip the
+    aggregation and carry the previous global forward). ``faults=None``
+    runs the historical clean program, bitwise-identical to before the
+    fault plane existed.
+
+    ``checkpoint_path`` — snapshot (params stack, global, H, waiting,
+    history, round index) every ``checkpoint_every`` aggregation
+    windows via ``repro.checkpoint.checkpoint``; ``resume`` continues
+    a snapshot mid-horizon, bitwise-equal on CPU to an uninterrupted
+    run. ``stop_after`` (rounds; checkpointed runs only) simulates an
+    interruption at the next window boundary — benches/tests use it to
+    produce a mid-horizon checkpoint to resume from."""
     T = len(processed)
     n = len(processed[0])
     idx, yb, wts, counts = pl.stage_rounds(processed, y_tr, max_pts)
     is_agg = (np.arange(T) + 1) % tau == 0
+
+    use_faults = faults is not None
+    act_arr = np.asarray(act_all)
+    fault_ops = ()
+    if use_faults:
+        act_arr = np.asarray(act_all, bool) & faults.activity_mask()
+        fault_ops = _stage_fault_ops(faults, T, n, tau)
+    guard_f = bool(guard) if use_faults else False
+    quorum_f = float(quorum) if use_faults else 0.0
 
     x_dev = _to_device_cached(x_tr)
     idx_dev = jnp.asarray(idx)
@@ -218,21 +372,118 @@ def run_rounds_scan(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
     else:
         xb_all, idx_arg = None, idx_dev
 
-    fn = _scan_program(apply_fn, float(eta), prestage)
-    _, losses, tl, ta, H_at = fn(
-        _stack(params, n), params, x_dev, xb_all, idx_arg,
-        jnp.asarray(yb), jnp.asarray(wts), jnp.asarray(counts),
-        jnp.asarray(act_all, jnp.float32), jnp.asarray(is_agg),
-        _to_device_cached(x_te), _to_device_cached(y_te))
+    args = (x_dev, xb_all, idx_arg, jnp.asarray(yb), jnp.asarray(wts),
+            jnp.asarray(counts), jnp.asarray(act_arr, jnp.float32),
+            jnp.asarray(is_agg), _to_device_cached(x_te),
+            _to_device_cached(y_te))
+
+    if checkpoint_path is not None or resume is not None:
+        return _run_scan_checkpointed(
+            apply_fn, params, n, T, tau, eta, prestage, args, fault_ops,
+            use_faults, guard_f, quorum_f, checkpoint_path,
+            checkpoint_every, resume, stop_after)
+
+    fn = _scan_program(apply_fn, float(eta), prestage, use_faults,
+                       guard_f, quorum_f)
+    res = fn(_stack(params, n), params, *args, *fault_ops)
+    losses, tl, ta, H_at = res[1:5]
 
     jax.block_until_ready(losses)
     agg_rounds = np.nonzero(is_agg)[0]
     tl, ta, H_at = np.asarray(tl), np.asarray(ta), np.asarray(H_at)
-    return {"device_loss": list(np.asarray(losses)),
-            "test_loss": [float(v) for v in tl[agg_rounds]],
-            "test_acc": [float(v) for v in ta[agg_rounds]],
-            "agg_round": [int(t) for t in agg_rounds],
-            "H_agg": list(H_at[agg_rounds])}
+    out = {"device_loss": list(np.asarray(losses)),
+           "test_loss": [float(v) for v in tl[agg_rounds]],
+           "test_acc": [float(v) for v in ta[agg_rounds]],
+           "agg_round": [int(t) for t in agg_rounds],
+           "H_agg": list(H_at[agg_rounds])}
+    if use_faults:
+        surv, qokf = np.asarray(res[5]), np.asarray(res[6])
+        out["agg_survivors"] = [float(v) for v in surv[agg_rounds]]
+        out["agg_quorum_ok"] = [bool(v > 0) for v in qokf[agg_rounds]]
+    return out
+
+
+def _run_scan_checkpointed(apply_fn, params, n, T, tau, eta, prestage,
+                           args, fault_ops, use_faults, guard, quorum,
+                           checkpoint_path, checkpoint_every, resume,
+                           stop_after):
+    """Window-chunked scan with checkpoint/resume (see
+    ``run_rounds_scan``). History arrays are carried at full (T, ...)
+    shape inside the snapshot so the restore template is shape-static;
+    the ``round`` scalar says how much of them is real."""
+    from repro.checkpoint import checkpoint as ckpt
+
+    step = max(1, int(checkpoint_every)) * tau
+    carry = (_stack(params, n), params, jnp.zeros(n, jnp.float32),
+             jnp.zeros(n, jnp.float32))
+    hist = {"losses": np.zeros((T, n), np.float32),
+            "tl": np.zeros(T, np.float32),
+            "ta": np.zeros(T, np.float32),
+            "H_at": np.zeros((T, n), np.float32)}
+    if use_faults:
+        hist["surv"] = np.zeros(T, np.float32)
+        hist["qok"] = np.ones(T, np.float32)
+
+    def _as_state(carry, hist, rnd):
+        W, wg, H, waiting = carry
+        return {"carry": {"W": W, "wg": wg, "H": H, "waiting": waiting},
+                "hist": hist, "round": np.asarray(rnd, np.int64)}
+
+    run_meta = {"kind": "fog-scan", "T": int(T), "n": int(n),
+                "tau": int(tau), "eta": float(eta),
+                "faults": bool(use_faults), "guard": bool(guard),
+                "quorum": float(quorum)}
+    start = 0
+    if resume is not None:
+        state, meta = ckpt.restore(resume, _as_state(carry, hist, 0))
+        for k, v in run_meta.items():
+            if meta.get(k) != v:
+                raise ValueError(
+                    f"checkpoint {resume!r} was written by a run with "
+                    f"{k}={meta.get(k)!r}; this run has {k}={v!r}")
+        start = int(state["round"])
+        c = state["carry"]
+        carry = (c["W"], c["wg"], c["H"], c["waiting"])
+        hist = {k: np.array(v) for k, v in state["hist"].items()}
+
+    fn = _scan_chunk_program(apply_fn, float(eta), prestage, use_faults,
+                             guard, quorum)
+    (x_dev, xb_all, idx_arg, yb, wts, counts, act, is_agg, x_te,
+     y_te) = args
+    keys = ["losses", "tl", "ta", "H_at"] + (
+        ["surv", "qok"] if use_faults else [])
+    t0 = start
+    while t0 < T:
+        if stop_after is not None and t0 >= stop_after:
+            break
+        t1 = min(t0 + step, T)
+        sl = slice(t0, t1)
+        carry, ys = fn(
+            carry, x_dev,
+            None if xb_all is None else xb_all[sl],
+            None if idx_arg is None else idx_arg[sl],
+            yb[sl], wts[sl], counts[sl], act[sl], is_agg[sl], x_te,
+            y_te, *(op[sl] for op in fault_ops))
+        for k, y in zip(keys, ys):
+            hist[k][sl] = np.asarray(y)
+        t0 = t1
+        if checkpoint_path is not None:
+            ckpt.save(checkpoint_path, _as_state(carry, hist, t0),
+                      metadata=run_meta)
+
+    is_agg_np = np.asarray(is_agg)
+    agg_rounds = np.nonzero(is_agg_np[:t0])[0]
+    out = {"device_loss": list(hist["losses"][:t0]),
+           "test_loss": [float(v) for v in hist["tl"][agg_rounds]],
+           "test_acc": [float(v) for v in hist["ta"][agg_rounds]],
+           "agg_round": [int(t) for t in agg_rounds],
+           "H_agg": list(hist["H_at"][agg_rounds])}
+    if use_faults:
+        out["agg_survivors"] = [float(v) for v in hist["surv"][agg_rounds]]
+        out["agg_quorum_ok"] = [bool(v > 0) for v in hist["qok"][agg_rounds]]
+    if t0 < T:
+        out["stopped_at"] = int(t0)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -256,47 +507,69 @@ class AsyncEvaluator:
     Error handling: a failure while dispatching (trace/compile errors)
     or while the device computation resolves is never swallowed — it is
     deferred and re-raised, with the original exception chained, at the
-    next ``collect()``/``result()``/``shutdown()``. ``submit`` after a
-    deferred failure is a no-op so a sweep loop fails once, at the
-    synchronization point, instead of crashing mid-dispatch.
+    next ``collect()``/``result()``/``shutdown()``. Transient dispatch
+    failures are retried ``retries`` times with capped exponential
+    backoff first; only a dispatch that fails every attempt is
+    deferred. ALL accumulated failures are listed in the raised error
+    (``.failures``), not just the first. ``submit`` after a deferred
+    failure is a no-op so a sweep loop fails once, at the
+    synchronization point, instead of crashing mid-dispatch;
+    ``shutdown`` is idempotent, including after a raised ``collect``.
     """
 
-    def __init__(self, apply_fn, x_te, y_te):
+    def __init__(self, apply_fn, x_te, y_te, *, retries: int = 3,
+                 backoff: float = 0.05, backoff_cap: float = 1.0):
         self._apply = apply_fn
         self._fn = _eval_program(apply_fn)
         self._x = _to_device_cached(x_te)
         self._y = _to_device_cached(y_te)
         self._pending: list = []
-        self._error: BaseException | None = None
+        self._errors: list[BaseException] = []
+        self._retries = max(0, int(retries))
+        self._backoff = float(backoff)
+        self._backoff_cap = float(backoff_cap)
+        self._closed = False
+
+    def _dispatch(self, fn, *args) -> None:
+        """Dispatch with capped exponential backoff; a failure that
+        survives every retry is deferred to ``collect()``."""
+        delay = self._backoff
+        for attempt in range(self._retries + 1):
+            try:
+                self._pending.append(fn(*args))
+                return
+            except Exception as e:
+                if attempt == self._retries:
+                    self._errors.append(e)
+                    return
+                time.sleep(min(delay, self._backoff_cap))
+                delay *= 2.0
 
     def submit(self, params) -> None:
-        if self._error is not None:
+        if self._errors:
             return                      # surfaced at the next collect()
-        try:
-            self._pending.append(self._fn(params, self._x, self._y))
-        except Exception as e:          # dispatch/trace failure: defer
-            self._error = e
+        self._closed = False
+        self._dispatch(self._fn, params, self._x, self._y)
 
     def submit_stack(self, params_stack, n_axes: int = 1) -> None:
         """Evaluate a stack of snapshots in ONE dispatch: the leading
         ``n_axes`` axes of every leaf are batch axes (vmapped over the
         pinned test set). The results arrive at ``collect()`` as arrays
         of that batch shape, in submission order."""
-        if self._error is not None:
+        if self._errors:
             return
-        try:
-            fn = _eval_stack_program(self._apply, int(n_axes))
-            self._pending.append(fn(params_stack, self._x, self._y))
-        except Exception as e:          # dispatch/trace failure: defer
-            self._error = e
+        self._closed = False
+        fn = _eval_stack_program(self._apply, int(n_axes))
+        self._dispatch(fn, params_stack, self._x, self._y)
 
     def collect(self) -> tuple[list, list]:
         """Block once for everything submitted; returns (losses, accs)
         — floats for ``submit`` entries, arrays for ``submit_stack``.
 
-        Re-raises (chained) the first deferred dispatch or device-side
-        failure instead of returning partial results."""
-        err = self._error
+        Re-raises instead of returning partial results: the error lists
+        EVERY accumulated dispatch/device failure (also available as
+        its ``.failures`` attribute) with the first one chained."""
+        errs = list(self._errors)
         losses, accs = [], []
         for item in self._pending:
             try:                        # device errors surface here
@@ -305,12 +578,18 @@ class AsyncEvaluator:
                 losses.append(float(tl) if tl.ndim == 0 else tl)
                 accs.append(float(ta) if ta.ndim == 0 else ta)
             except Exception as e:
-                err = err or e
+                errs.append(e)
         self._pending = []
-        self._error = None
-        if err is not None:
-            raise RuntimeError(
-                "AsyncEvaluator: a submitted evaluation failed") from err
+        self._errors = []
+        if errs:
+            lines = "\n".join(
+                f"  [{i}] {type(e).__name__}: {e}"
+                for i, e in enumerate(errs))
+            exc = RuntimeError(
+                f"AsyncEvaluator: {len(errs)} submitted evaluation(s) "
+                f"failed:\n{lines}")
+            exc.failures = tuple(errs)
+            raise exc from errs[0]
         return losses, accs
 
     def result(self) -> tuple[list[float], list[float]]:
@@ -318,7 +597,12 @@ class AsyncEvaluator:
         return self.collect()
 
     def shutdown(self) -> None:
-        """Drain everything pending; re-raise any deferred failure."""
+        """Drain everything pending; re-raise any deferred failure.
+        Idempotent: a second call (e.g. from a finally block after a
+        raised ``collect``) is a no-op."""
+        if self._closed:
+            return
+        self._closed = True
         self.collect()
 
 
@@ -377,9 +661,12 @@ def batched_compile_count() -> int:
         _program_cache_size(fn) for fn in _BUCKET_PROGRAMS.values())
 
 
-def _bucket_program(apply_fn, eta: float, prestage: bool, mesh):
-    """One program per (model, η, staging mode, mesh) — jit retraces
-    once per shape bucket, so a whole sweep compiles #buckets programs.
+def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
+                    faults: bool = False, guard: bool = False,
+                    quorum: float = 0.0):
+    """One program per (model, η, staging mode, mesh, fault config) —
+    jit retraces once per shape bucket, so a whole sweep compiles
+    #buckets programs.
 
     The scenario axis S leads every operand and is vmapped; inside a
     mesh (``mesh`` not None) the fog-device axis n is additionally
@@ -397,9 +684,22 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh):
     them; the arithmetic is unchanged (same sums, same divide, same
     order), keeping the path numerically identical to the inline
     aggregation of ``run_rounds_scan``.
+
+    With ``faults`` the per-window operands gain the window-last
+    (upload_ok, corrupt) fault views and the epilogue issues GUARDED
+    sums (missing/non-finite uploads masked out of the contributing
+    set before the fixed-order reduction) plus the psum'd
+    survivor/expected counts; the quorum decision — like the divide —
+    is deferred to the NEXT prologue, where it gates the finalize, the
+    sync, the waiting update and the H reset (which moves from the
+    epilogue to the prologue in faults mode only: resetting before the
+    next window's first round is positionally different but
+    numerically identical, and keeps a quorum-failed window's H
+    accumulating). With ``faults=False`` the trace is the historical
+    clean program, bit for bit.
     """
     global _EVICTED_BUCKET_COMPILES
-    key = (apply_fn, eta, prestage, mesh)
+    key = (apply_fn, eta, prestage, mesh, faults, guard, quorum)
     cached = _BUCKET_PROGRAMS.get(key)
     if cached is not None:
         _BUCKET_PROGRAMS.move_to_end(key)
@@ -462,11 +762,36 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh):
                     (-1,) + (1,) * (old.ndim - 1)), old),
             p_num, wg)
 
+    def agg_stats(W, H, contributing, upl, cor):
+        """Guarded epilogue reduction plus the psum'd survivor and
+        expected contributor counts the next prologue's quorum test
+        needs (faults mode only)."""
+        Wu, contrib = _guarded_uploads(W, contributing, upl, cor,
+                                       guard, 2)
+        num, tot = agg_sums(Wu, H, contrib)
+        surv = contrib.sum(axis=1)                      # (S,)
+        expd = contributing.sum(axis=1)                 # (S,)
+        if mesh is not None:
+            surv = jax.lax.psum(surv, axis)
+            expd = jax.lax.psum(expd, axis)
+        return num, tot, surv, expd
+
     def train(W0, wg0, x_tr, xb_all, idx_all, yb_all, w_all,
-              counts, act, agg_w):
+              counts, act, agg_w, *fault_ops):
         def window(carry, xs):
-            W, wg, H, waiting, p_num, p_tot, p_act, p_flag = carry
-            xb, idx, yb, w, cnt, a, agg = xs
+            if faults:
+                (W, wg, H, waiting, p_num, p_tot, p_act, p_flag,
+                 p_surv, p_expd) = carry
+                xb, idx, yb, w, cnt, a, agg, upl, cor = xs
+                # the quorum decision for the previous window lands
+                # here, with its deferred sums: survivors below the
+                # quorum fraction kill the whole aggregation event
+                qok = p_surv >= quorum * p_expd         # (S,)
+                qok_f = qok.astype(jnp.float32)
+                p_flag = p_flag * qok_f
+            else:
+                W, wg, H, waiting, p_num, p_tot, p_act, p_flag = carry
+                xb, idx, yb, w, cnt, a, agg = xs
             # prologue: REALIZE the aggregation issued by the previous
             # window's epilogue (divide + sync + waiting bookkeeping)
             wg = finalize(p_num, p_tot, p_flag, wg)
@@ -479,6 +804,12 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh):
                 W, wg)
             waiting = jnp.where((p_flag > 0)[:, None],
                                 1.0 - p_act, waiting)
+            if faults:
+                # H reset deferred from the epilogue (see docstring):
+                # it must be quorum-gated, and before this window's
+                # first round it is numerically identical
+                H = jnp.where((p_flag > 0)[:, None],
+                              jnp.zeros_like(H), H)
             # waiting only changes at aggregations (window-last rounds
             # by construction), so it is constant inside the window
             act_eff = a * (1.0 - waiting)               # (tau, S, n)
@@ -497,9 +828,16 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh):
             # is deferred to the next prologue (double-buffered carry),
             # so on the sharded path the cross-shard psum of window w
             # can overlap the gather + first local steps of window w+1
+            H_snap = H
+            if faults:
+                num, tot, surv, expd = jax.lax.optimization_barrier(
+                    agg_stats(W, H, act_eff[-1], upl, cor))
+                carry = (W, wg, H, waiting, num, tot, a[-1], agg,
+                         surv, expd)
+                return carry, (losses, H_snap, wg, p_surv, p_expd,
+                               qok_f)
             num, tot = jax.lax.optimization_barrier(
                 agg_sums(W, H, act_eff[-1]))
-            H_snap = H
             H = jnp.where((agg > 0)[:, None], jnp.zeros_like(H), H)
             carry = (W, wg, H, waiting, num, tot, a[-1], agg)
             return carry, (losses, H_snap, wg)
@@ -510,17 +848,34 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh):
         carry0 = (W0, wg0, zeros, zeros,
                   tree_map(jnp.zeros_like, wg0), jnp.zeros(S, jnp.float32),
                   zeros, jnp.zeros(S, jnp.float32))
+        if faults:
+            carry0 = carry0 + (jnp.zeros(S, jnp.float32),
+                               jnp.zeros(S, jnp.float32))
         xs = (xb_all, idx_all, yb_all, w_all, counts, act, agg_w)
-        carry, (losses, H_w, wg_ys) = jax.lax.scan(
+        xs = xs + tuple(fault_ops)
+        carry, ys = jax.lax.scan(
             window, carry0, xs, unroll=2 if mesh is not None else 1)
         # the ys entry of window w is the global params BEFORE its
         # aggregation realizes; shift by one and realize the final
         # pending window so wg_win[w] is the post-aggregation global
-        _, wg, _, _, p_num, p_tot, _, p_flag = carry
-        wg_last = finalize(p_num, p_tot, p_flag, wg)
+        if faults:
+            losses, H_w, wg_ys, surv_ys, expd_ys, qok_ys = ys
+            (_, wg, _, _, p_num, p_tot, _, p_flag, p_surv,
+             p_expd) = carry
+            qok_last = (p_surv >= quorum * p_expd).astype(jnp.float32)
+            wg_last = finalize(p_num, p_tot, p_flag * qok_last, wg)
+        else:
+            losses, H_w, wg_ys = ys
+            _, wg, _, _, p_num, p_tot, _, p_flag = carry
+            wg_last = finalize(p_num, p_tot, p_flag, wg)
         wg_win = tree_map(
             lambda ys, last: jnp.concatenate([ys[1:], last[None]], 0),
             wg_ys, wg_last)
+        if faults:
+            shift = lambda ys, last: jnp.concatenate(
+                [ys[1:], last[None]], 0)
+            return (losses, H_w, wg_win, shift(surv_ys, p_surv),
+                    shift(expd_ys, p_expd), shift(qok_ys, qok_last))
         return losses, H_w, wg_win
 
     fn = train
@@ -531,9 +886,13 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh):
 
         dev = P(None, axis)                  # (S, n, ...) params stack
         w_dev = P(None, None, None, axis)    # (windows, tau, S, n, ...)
+        wl_dev = P(None, None, axis)         # (windows, S, n) fault views
         in_specs = (dev, P(), P(), w_dev, w_dev, w_dev, w_dev, w_dev,
                     w_dev, P())
         out_specs = (w_dev, P(None, None, axis), P())
+        if faults:
+            in_specs = in_specs + (wl_dev, wl_dev)
+            out_specs = out_specs + (P(), P(), P())
         fn = shard_map(fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs)
     donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -553,7 +912,8 @@ def _pad_axis(a, size: int, axis: int):
 def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
                        processed_list, act_list, tau: int, eta: float,
                        max_points=None, *, bucket: str = "pow2",
-                       mesh="auto") -> list[dict]:
+                       mesh="auto", faults=None, guard: bool = True,
+                       quorum: float = 0.0) -> list[dict]:
     """Train a whole bucket of scenarios in ONE compiled program.
 
     ``processed_list``/``act_list``/``params_list`` carry S scenarios
@@ -572,8 +932,31 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
     Returns one history dict per scenario, each sliced back to its true
     (T, n) and — on CPU — bitwise-identical to running that scenario
     alone through ``run_rounds_scan``.
+
+    ``faults`` — optional list of per-scenario
+    :class:`repro.core.faults.FaultSchedule` (entries may be None):
+    crash outages are ANDed into each scenario's activity and the
+    window-last (upload_ok, corrupt) views ride the window scan, with
+    the shared ``guard``/``quorum`` config applied across the bucket
+    (see ``run_rounds_scan`` for the semantics).
     """
     S = len(processed_list)
+    use_faults = faults is not None and any(f is not None for f in faults)
+    if use_faults:
+        if len(faults) != S:
+            raise ValueError(f"faults list has {len(faults)} entries "
+                             f"for {S} scenarios")
+        act_list = list(act_list)
+        for b, f in enumerate(faults):
+            if f is None:
+                continue
+            T_s, n_s = len(processed_list[b]), len(processed_list[b][0])
+            _stage_fault_ops(f, T_s, n_s, tau)     # dims validation
+            act_list[b] = np.asarray(act_list[b], bool) \
+                & f.activity_mask()
+    guard_f = bool(guard) if use_faults else False
+    quorum_f = float(quorum) if use_faults else 0.0
+
     batch = pl.stage_scenario_batch(
         processed_list, y_tr, act_list, tau,
         max_points=list(max_points) if max_points is not None else None,
@@ -607,6 +990,24 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
     agg_w = np.ascontiguousarray(np.asarray(
         batch.is_agg, np.float32).reshape(S, n_win, tau)[..., -1].T)
 
+    fault_ops = ()
+    if use_faults:
+        # identity-initialized window-last fault views (phantom windows
+        # and devices stay at the 1.0 no-fault value), filled from each
+        # scenario's schedule, staged as (windows, S, n_pad)
+        upl_w = np.ones((S, n_win, n_pad), np.float32)
+        cor_w = np.ones((S, n_win, n_pad), np.float32)
+        for b, f in enumerate(faults):
+            if f is None:
+                continue
+            upl_v, cor_v = f.engine_arrays()        # (T_s, n_s)
+            sl = slice(tau - 1, f.T, tau)
+            upl_w[b, :f.T // tau, :f.n] = upl_v[sl]
+            cor_w[b, :f.T // tau, :f.n] = cor_v[sl]
+        fault_ops = (jnp.asarray(np.ascontiguousarray(
+            np.moveaxis(upl_w, 0, 1))), jnp.asarray(
+            np.ascontiguousarray(np.moveaxis(cor_w, 0, 1))))
+
     x_dev = _to_device_cached(x_tr)
     idx_dev = jnp.asarray(idx)
     item_bytes = int(np.prod(x_tr.shape[1:], dtype=np.int64)) * 4
@@ -628,11 +1029,15 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
         lambda *ps: jnp.asarray(np.stack([np.asarray(p) for p in ps])),
         *params_list)
 
-    fn = _bucket_program(apply_fn, float(eta), prestage, mesh)
-    losses, H_w, wg_win = fn(
+    fn = _bucket_program(apply_fn, float(eta), prestage, mesh,
+                         use_faults, guard_f, quorum_f)
+    res = fn(
         W0, wg0, x_dev, xb_all, idx_arg, jnp.asarray(yb),
         jnp.asarray(wts), jnp.asarray(counts), jnp.asarray(act),
-        jnp.asarray(agg_w))
+        jnp.asarray(agg_w), *fault_ops)
+    losses, H_w, wg_win = res[:3]
+    if use_faults:
+        surv_win, expd_win, qok_win = (np.asarray(r) for r in res[3:])
 
     # one stacked eval dispatch drains the whole bucket's (windows, S)
     # snapshot grid off the hot path; per-scenario agg windows are
@@ -648,28 +1053,37 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
         T, n = batch.T[b], batch.n[b]
         agg_rounds = np.nonzero(batch.is_agg[b, :T])[0]
         wins = agg_rounds // tau
-        hists.append({
+        h = {
             "device_loss": list(losses[:T, b, :n]),
             "test_loss": [float(v) for v in tl[wins, b]],
             "test_acc": [float(v) for v in ta[wins, b]],
             "agg_round": [int(t) for t in agg_rounds],
-            "H_agg": list(H_w[wins, b][:, :n])})
+            "H_agg": list(H_w[wins, b][:, :n])}
+        if use_faults:
+            h["agg_survivors"] = [float(v) for v in surv_win[wins, b]]
+            h["agg_quorum_ok"] = [bool(v > 0) for v in qok_win[wins, b]]
+        hists.append(h)
     return hists
 
 
 def run_rounds_batched_single(apply_fn, params, x_tr, y_tr, x_te, y_te,
                               processed, act_all, tau: int, eta: float,
-                              max_pts: int, *, mesh="auto") -> dict:
+                              max_pts: int, *, mesh="auto", faults=None,
+                              guard: bool = True,
+                              quorum: float = 0.0) -> dict:
     """Single-scenario entry to the batched path (``engine="batched"``
     with S=1): same program structure, exact pad sizes."""
     return run_rounds_batched(
         apply_fn, [params], x_tr, y_tr, x_te, y_te, [processed],
-        [act_all], tau, eta, [max_pts], bucket="exact", mesh=mesh)[0]
+        [act_all], tau, eta, [max_pts], bucket="exact", mesh=mesh,
+        faults=None if faults is None else [faults], guard=guard,
+        quorum=quorum)[0]
 
 
 def run_rounds_sharded(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
                        act_all, tau: int, eta: float, max_pts: int, *,
-                       mesh=None) -> dict:
+                       mesh=None, faults=None, guard: bool = True,
+                       quorum: float = 0.0) -> dict:
     """Device-sharded scan: the n fog devices are partitioned across the
     mesh's "data" axis; n is padded up to a mesh multiple with phantom
     always-inactive devices (zero weights and counts — they never train,
@@ -689,7 +1103,9 @@ def run_rounds_sharded(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
         mesh = make_data_mesh()
     return run_rounds_batched(
         apply_fn, [params], x_tr, y_tr, x_te, y_te, [processed],
-        [act_all], tau, eta, [max_pts], bucket="exact", mesh=mesh)[0]
+        [act_all], tau, eta, [max_pts], bucket="exact", mesh=mesh,
+        faults=None if faults is None else [faults], guard=guard,
+        quorum=quorum)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -698,9 +1114,13 @@ def run_rounds_sharded(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
 
 
 def run_rounds_legacy(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
-                      act_all, tau: int, eta: float, max_pts: int) -> dict:
+                      act_all, tau: int, eta: float, max_pts: int, *,
+                      faults=None, guard: bool = True,
+                      quorum: float = 0.0) -> dict:
     """The original per-round dispatch loop (fresh host→device copies of
-    the padded batch every round)."""
+    the padded batch every round). ``faults``/``guard``/``quorum`` give
+    the compiled paths their numerical oracle under fault injection
+    (see ``run_rounds_scan``)."""
     T = len(processed)
     n = len(processed[0])
     W = _stack(params, n)
@@ -709,12 +1129,22 @@ def run_rounds_legacy(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
     eval_fn = jax.jit(lambda p, x, y: (
         mm.ce_loss(apply_fn(p, x), y), mm.accuracy(apply_fn(p, x), y)))
 
+    act_arr = np.asarray(act_all)
+    upl = cor = None
+    if faults is not None:
+        upl, cor = (np.asarray(v) for v in
+                    _stage_fault_ops(faults, T, n, tau))
+        act_arr = np.asarray(act_all, bool) & faults.activity_mask()
+
     H = np.zeros(n)
     waiting = np.zeros(n, bool)
     out = {"device_loss": [], "test_loss": [], "test_acc": [],
            "agg_round": [], "H_agg": []}
+    if faults is not None:
+        out["agg_survivors"] = []
+        out["agg_quorum_ok"] = []
     for t in range(T):
-        act = np.asarray(act_all[t], bool)
+        act = np.asarray(act_arr[t], bool)
         xb, yb, wts = pl.pad_batches(processed[t], x_tr, y_tr, max_pts)
         W, losses = step(W, jnp.asarray(xb), jnp.asarray(yb),
                          jnp.asarray(wts),
@@ -724,12 +1154,29 @@ def run_rounds_legacy(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
 
         if (t + 1) % tau == 0:
             contributing = jnp.asarray(act & ~waiting, jnp.float32)
-            w_global = aggregate(W, jnp.asarray(H, jnp.float32),
-                                 contributing, w_global)
-            W = _sync(W, w_global, jnp.asarray(act))
-            waiting = ~act          # whoever is out now waits for next sync
-            out["H_agg"].append(H.copy())
-            H[:] = 0.0
+            if faults is not None:
+                Wu, contrib = _guarded_uploads(
+                    W, contributing, jnp.asarray(upl[t]),
+                    jnp.asarray(cor[t]), guard, 1)
+                surv = float(contrib.sum())
+                expd = float(contributing.sum())
+                qok = surv >= quorum * expd
+                out["agg_survivors"].append(surv)
+                out["agg_quorum_ok"].append(bool(qok))
+                out["H_agg"].append(H.copy())
+                if qok:
+                    w_global = aggregate(Wu, jnp.asarray(H, jnp.float32),
+                                         contrib, w_global)
+                    W = _sync(W, w_global, jnp.asarray(act))
+                    waiting = ~act
+                    H[:] = 0.0
+            else:
+                w_global = aggregate(W, jnp.asarray(H, jnp.float32),
+                                     contributing, w_global)
+                W = _sync(W, w_global, jnp.asarray(act))
+                waiting = ~act      # whoever is out now waits for next sync
+                out["H_agg"].append(H.copy())
+                H[:] = 0.0
             tl_, ta_ = eval_fn(w_global, jnp.asarray(x_te), jnp.asarray(y_te))
             out["agg_round"].append(t)
             out["test_loss"].append(float(tl_))

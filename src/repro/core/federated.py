@@ -57,7 +57,13 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                       streams: pl.FogStreams | None = None,
                       activity: np.ndarray | None = None,
                       engine: str = "scan", mesh=None,
-                      schedule: NetworkSchedule | None = None) -> dict:
+                      schedule: NetworkSchedule | None = None,
+                      faults=None, guard: bool = True,
+                      quorum: float = 0.0,
+                      checkpoint_path: str | None = None,
+                      checkpoint_every: int = 1,
+                      resume: str | None = None,
+                      stop_after: int | None = None) -> dict:
     """Train with a given movement plan. Returns history dict.
 
     ``schedule`` — optional :class:`NetworkSchedule`: the per-round
@@ -83,10 +89,23 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     across calls (keyed by identity + a sampled checksum): treat the
     arrays in ``data`` as immutable between calls — a sparse in-place
     edit that slips past the checksum would train on stale pixels.
+
+    ``faults`` — optional :class:`repro.core.faults.FaultSchedule`
+    (unannounced failures): crash outages stop data collection and
+    training like unplanned churn, and straggled/dropped/corrupted
+    uploads are injected inside the engine's aggregation, guarded by
+    ``guard`` (finite-masking + survivor renormalization) and gated by
+    ``quorum`` (windows whose surviving-upload fraction falls below it
+    carry the previous global forward). The returned history gains
+    ``fault_summary``/``agg_survivors``/``agg_quorum_ok``.
+
+    ``checkpoint_path``/``checkpoint_every``/``resume``/``stop_after``
+    — window-boundary checkpointing of the scan engine (see
+    ``core.engine.run_rounds_scan``); other engines reject them.
     """
     x_tr, y_tr, x_te, y_te = data
     streams, processed, act_all, max_pts = _prepare_streams(
-        cfg, data, plan, streams, activity, schedule)
+        cfg, data, plan, streams, activity, schedule, faults)
 
     key = jax.random.PRNGKey(cfg.seed)
     w_global, apply_fn = make_model(cfg.model, key)
@@ -94,6 +113,20 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     hist = _history_base(cfg, y_tr, streams, processed, act_all)
 
     engine = eng.resolve_engine(engine)
+    fault_kw = {}
+    if faults is not None:
+        fault_kw = dict(faults=faults, guard=guard, quorum=quorum)
+        hist["fault_summary"] = faults.summary()
+    ckpt_kw = {}
+    if (checkpoint_path is not None or resume is not None
+            or stop_after is not None):
+        if engine != "scan":
+            raise ValueError(
+                "checkpoint/resume is a scan-engine feature; got "
+                f"engine={engine!r}")
+        ckpt_kw = dict(checkpoint_path=checkpoint_path,
+                       checkpoint_every=checkpoint_every,
+                       resume=resume, stop_after=stop_after)
     runners = {"scan": eng.run_rounds_scan,
                "sharded": functools.partial(eng.run_rounds_sharded,
                                             mesh=mesh),
@@ -109,15 +142,16 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                          f"expected one of {sorted(runners)} or 'auto'")
     runner = runners[engine]
     hist.update(runner(apply_fn, w_global, x_tr, y_tr, x_te, y_te,
-                       processed, act_all, cfg.tau, cfg.eta, max_pts))
+                       processed, act_all, cfg.tau, cfg.eta, max_pts,
+                       **fault_kw, **ckpt_kw))
     return hist
 
 
 def _prepare_streams(cfg: FedConfig, data, plan, streams, activity,
-                     schedule):
+                     schedule, faults=None):
     """Host-side data-plane prep shared by the single and batched run
-    paths: default streams, schedule→activity, inactive-collection
-    zeroing, movement routing, pad sizing."""
+    paths: default streams, schedule→activity, fault-outage masking,
+    inactive-collection zeroing, movement routing, pad sizing."""
     _, y_tr, _, _ = data
     rng = np.random.default_rng(cfg.seed)
     if streams is None:
@@ -130,6 +164,16 @@ def _prepare_streams(cfg: FedConfig, data, plan, streams, activity,
                 f"run is (T={cfg.T}, n={cfg.n})")
         if activity is None:
             activity = schedule.activity()
+    if faults is not None and faults.has_crashes:
+        # a crashed device stops collecting/training like a churned one
+        # — except nobody announced it (no replanning saw it coming)
+        if (faults.T, faults.n) != (cfg.T, cfg.n):
+            raise ValueError(
+                f"fault schedule is (T={faults.T}, n={faults.n}) but "
+                f"the run is (T={cfg.T}, n={cfg.n})")
+        base = (np.asarray(activity, bool) if activity is not None
+                else np.ones((cfg.T, cfg.n), bool))
+        activity = base & faults.activity_mask()
     if activity is not None:
         # inactive devices collect nothing (no-op for all-active masks,
         # e.g. a constant schedule)
@@ -167,8 +211,10 @@ def run_network_aware_batched(cfgs: list[FedConfig], data,
                               streams: list | None = None,
                               activities: list | None = None,
                               schedules: list | None = None,
-                              mesh="auto", bucket: str = "pow2"
-                              ) -> list[dict]:
+                              mesh="auto", bucket: str = "pow2",
+                              faults: list | None = None,
+                              guard: bool = True,
+                              quorum: float = 0.0) -> list[dict]:
     """Train a whole bucket of sweep points in ONE compiled program.
 
     The batched counterpart of looping ``run_network_aware`` over a
@@ -192,9 +238,10 @@ def run_network_aware_batched(cfgs: list[FedConfig], data,
     S = len(cfgs)
     if not (S == len(plans)
             and all(lst is None or len(lst) == S
-                    for lst in (streams, activities, schedules))):
-        raise ValueError("cfgs/plans/streams/activities/schedules must "
-                         "have one entry per scenario")
+                    for lst in (streams, activities, schedules,
+                                faults))):
+        raise ValueError("cfgs/plans/streams/activities/schedules/"
+                         "faults must have one entry per scenario")
     head = (cfgs[0].model, cfgs[0].eta, cfgs[0].tau)
     for cfg in cfgs[1:]:
         if (cfg.model, cfg.eta, cfg.tau) != head:
@@ -206,15 +253,19 @@ def run_network_aware_batched(cfgs: list[FedConfig], data,
     pl.reset_padding_warnings()          # inflation warnings: once/sweep
     processed_list, act_list, max_list, hists = [], [], [], []
     for b, cfg in enumerate(cfgs):
+        f = faults[b] if faults is not None else None
         st, processed, act_all, max_pts = _prepare_streams(
             cfg, data, plans[b],
             streams[b] if streams is not None else None,
             activities[b] if activities is not None else None,
-            schedules[b] if schedules is not None else None)
+            schedules[b] if schedules is not None else None, f)
         processed_list.append(processed)
         act_list.append(act_all)
         max_list.append(max_pts)
-        hists.append(_history_base(cfg, y_tr, st, processed, act_all))
+        h = _history_base(cfg, y_tr, st, processed, act_all)
+        if f is not None:
+            h["fault_summary"] = f.summary()
+        hists.append(h)
 
     models = [make_model(cfg.model, jax.random.PRNGKey(cfg.seed))
               for cfg in cfgs]
@@ -223,7 +274,7 @@ def run_network_aware_batched(cfgs: list[FedConfig], data,
     outs = eng.run_rounds_batched(
         apply_fn, params_list, x_tr, y_tr, x_te, y_te, processed_list,
         act_list, cfgs[0].tau, cfgs[0].eta, max_list, bucket=bucket,
-        mesh=mesh)
+        mesh=mesh, faults=faults, guard=guard, quorum=quorum)
     for hist, out in zip(hists, outs):
         hist.update(out)
     return hists

@@ -159,6 +159,27 @@ class NetworkSchedule:
                    active=active, mask_inactive=True,
                    initial_active=initial_active)
 
+    def with_activity(self, active, *,
+                      mask_inactive: bool | None = None
+                      ) -> "NetworkSchedule":
+        """Same network, different active trace — how the fault plane
+        composes crash outages into the announced schedule
+        (``faults.FaultSchedule.compose``). Adjacency storage (base /
+        full / events) is preserved; ``mask_inactive`` defaults to the
+        schedule's current setting (note adjacency masking only applies
+        in base/masked storage — events/full modes keep their stored
+        links and expose the new trace through ``active_at`` only)."""
+        active = np.asarray(active, bool)
+        if active.shape != (self.T, self.n):
+            raise ValueError(f"active shape {active.shape} != "
+                             f"{(self.T, self.n)}")
+        return NetworkSchedule(
+            self.T, self.n, base_adj=self._base, adj_full=self._full,
+            link_events=tuple(self._link_events), active=active,
+            mask_inactive=self._mask if mask_inactive is None
+            else bool(mask_inactive),
+            initial_active=self._initial_active)
+
     # -- accessors ------------------------------------------------------
 
     @property

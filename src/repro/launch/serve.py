@@ -3,25 +3,39 @@ scale) + jitted single-token decode loop with KV/SSM cache.
 
     python -m repro.launch.serve --arch mamba2-1.3b --batch 4 \
         --prompt-len 16 --gen 32
+
+``--checkpoint PATH`` snapshots the model params (atomically — the
+write goes to a temp file and lands via rename, so an interrupt never
+corrupts the previous snapshot) before generation and on interrupt;
+``--resume CKPT`` restores params from such a snapshot instead of the
+seeded init. A first SIGINT exits CLEANLY: the decode loop stops at
+the next token boundary, the latest state is flushed to the checkpoint
+and the partial generation is reported; a second SIGINT aborts hard.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import signal
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import checkpoint as ckpt
 from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.models.module import init_params
 
 
 def greedy_generate(cfg, params, prompts: np.ndarray, gen: int,
-                    cache_len: int | None = None):
-    """prompts (B, P) int32; returns (tokens (B, P+gen), tok/s)."""
+                    cache_len: int | None = None, should_stop=None):
+    """prompts (B, P) int32; returns (tokens (B, P+gen'), tok/s).
+
+    ``should_stop`` — optional zero-arg callable polled at every decode
+    step; returning True ends generation at that token boundary (the
+    SIGINT hook), possibly with fewer than ``gen`` generated tokens."""
     B, P = prompts.shape
     cache_len = cache_len or (P + gen)
     cache = init_params(T.init_cache_specs(cfg, B, cache_len),
@@ -40,18 +54,20 @@ def greedy_generate(cfg, params, prompts: np.ndarray, gen: int,
         return nxt.astype(jnp.int32)[:, None], cache
 
     toks = [prompts[:, i:i + 1] for i in range(P)]
-    cur = jnp.asarray(toks[0])
     # prefill: feed prompt tokens through the decode path
     for i in range(P):
         nxt, cache = step(params, cache, jnp.asarray(toks[i]), i)
     out = [nxt]
     t0 = time.time()
     for g in range(gen - 1):
+        if should_stop is not None and should_stop():
+            break
         nxt, cache = step(params, cache, out[-1], P + g)
         out.append(nxt)
     dt = time.time() - t0
     gen_toks = np.concatenate([np.asarray(o) for o in out], axis=1)
-    return np.concatenate([prompts, gen_toks], axis=1), (gen - 1) * B / dt
+    return (np.concatenate([prompts, gen_toks], axis=1),
+            (len(out) - 1) / max(dt, 1e-9) * B)
 
 
 def main(argv=None):
@@ -61,18 +77,57 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="atomically snapshot params here (and flush "
+                         "on SIGINT)")
+    ap.add_argument("--resume", default=None, metavar="CKPT",
+                    help="restore params from a --checkpoint snapshot "
+                         "instead of the seeded init")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=True)
     params = init_params(T.specs(cfg), jax.random.PRNGKey(args.seed),
                          jnp.float32)
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    toks, tps = greedy_generate(cfg, params, prompts, args.gen)
+    resumed = False
+    if args.resume is not None:
+        params, meta = ckpt.restore(args.resume, params)
+        if meta.get("arch") not in (None, args.arch):
+            raise SystemExit(
+                f"--resume snapshot was saved for arch "
+                f"{meta.get('arch')!r}, not {args.arch!r}")
+        resumed = True
+    if args.checkpoint is not None:
+        ckpt.save(args.checkpoint, params, {"arch": args.arch,
+                                            "seed": args.seed})
+
+    # first SIGINT: finish the in-flight token, flush the checkpoint,
+    # exit cleanly with the partial generation; second SIGINT: abort
+    interrupted = False
+    prev_handler = signal.getsignal(signal.SIGINT)
+
+    def _on_sigint(signum, frame):
+        nonlocal interrupted
+        if interrupted:
+            raise KeyboardInterrupt
+        interrupted = True
+
+    signal.signal(signal.SIGINT, _on_sigint)
+    try:
+        rng = np.random.default_rng(args.seed)
+        prompts = rng.integers(0, cfg.vocab_size,
+                               (args.batch, args.prompt_len)).astype(np.int32)
+        toks, tps = greedy_generate(cfg, params, prompts, args.gen,
+                                    should_stop=lambda: interrupted)
+        if interrupted and args.checkpoint is not None:
+            ckpt.save(args.checkpoint, params, {"arch": args.arch,
+                                                "seed": args.seed,
+                                                "interrupted": True})
+    finally:
+        signal.signal(signal.SIGINT, prev_handler)
     out = {"arch": args.arch, "batch": args.batch,
            "generated_shape": list(toks.shape),
            "decode_tokens_per_s": round(tps, 1),
+           "interrupted": interrupted, "resumed": resumed,
            "sample": toks[0, -10:].tolist()}
     print(json.dumps(out, indent=2))
     return out

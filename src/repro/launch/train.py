@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.base import InputShape
 from repro.configs.registry import get_config
 from repro.core import estimator as est
+from repro.core import faults as fl
 from repro.core import federated as F
 from repro.core import movement as mv
 from repro.core.costs import synthetic_costs, testbed_like_costs, with_capacity
@@ -115,14 +116,31 @@ def run_fog(args) -> dict:
                     if replan == "predict" else adj)
     plan = solve_setting(args.setting, traces, plan_network, D,
                          error_model=args.error_model)
-    if dynamic:
+    # unannounced faults: never visible to the planner — crash outages
+    # only change the EXECUTED network (realization + engine masking),
+    # upload faults only the engine's guarded aggregation. A separate
+    # rng stream (seed + 7919) keeps streams/costs/topology bitwise
+    # identical to the fault-free run
+    faults = fl.make_faults(args.faults, cfg.T, cfg.n, cfg.tau,
+                            rate=args.fault_rate, seed=args.seed + 7919,
+                            corrupt=args.corrupt_mode)
+    if faults is not None and faults.has_crashes:
+        plan = mv.realize_plan(plan, faults.compose(
+            schedule if dynamic else None, adj=adj))
+    elif dynamic:
         plan = mv.realize_plan(plan, schedule)   # no-op for oracle greedy
     from repro.core.engine import resolve_engine
 
     engine = resolve_engine(args.engine)
+    if (args.checkpoint or args.resume) and args.engine == "auto":
+        engine = "scan"                  # checkpointing is scan-only
     hist = F.run_network_aware(cfg, data, traces, adj, plan,
                                streams=streams, schedule=schedule,
-                               engine=engine)
+                               engine=engine, faults=faults,
+                               guard=not args.unguarded,
+                               quorum=args.quorum,
+                               checkpoint_path=args.checkpoint,
+                               resume=args.resume)
     cost = mv.plan_cost(plan, traces, D, error_model=args.error_model)
     out = {"mode": "fog", "setting": args.setting, "engine": engine,
            "schedule": sched_kind, "replan": replan,
@@ -130,6 +148,10 @@ def run_fog(args) -> dict:
            "final_acc": hist["test_acc"][-1] if hist["test_acc"] else None,
            "acc_curve": hist["test_acc"], "cost": cost,
            "sim_before": hist["sim_before"], "sim_after": hist["sim_after"]}
+    if faults is not None:
+        out["fault_summary"] = hist["fault_summary"]
+        out["quorum_skips"] = int(sum(
+            not ok for ok in hist.get("agg_quorum_ok", [])))
     print(json.dumps(out, default=float, indent=2))
     return out
 
@@ -301,6 +323,37 @@ def main(argv=None):
                          "sweeps shard it via run_network_aware_"
                          "batched), or the legacy per-round oracle "
                          "loop")
+    ap.add_argument("--faults", default="none",
+                    choices=["none", "straggle", "drop", "crash",
+                             "corrupt", "mixed"],
+                    help="unannounced fault injection (core.faults): "
+                         "straggler upload misses, dropped uploads, "
+                         "crash-mid-window exits, corrupted updates, "
+                         "or an even mix — sampled per window at "
+                         "--fault-rate from a separate seeded stream")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="per-upload (per-window for crash) fault "
+                         "probability; 0 disables injection")
+    ap.add_argument("--corrupt-mode", default="nan",
+                    choices=["nan", "inf", "scale"],
+                    help="corrupted-update payload: non-finite (caught "
+                         "by the finite-masking guard) or a Byzantine "
+                         "scale that survives it")
+    ap.add_argument("--quorum", type=float, default=0.0,
+                    help="minimum surviving-upload fraction for a "
+                         "window's aggregation to commit; below it the "
+                         "previous global carries forward")
+    ap.add_argument("--unguarded", action="store_true",
+                    help="disable guarded aggregation (finite-masking "
+                         "+ survivor renormalization) — the ablation "
+                         "arm of the fault_tolerance bench")
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="snapshot training state atomically at every "
+                         "aggregation-window boundary (scan engine)")
+    ap.add_argument("--resume", default=None, metavar="CKPT",
+                    help="continue a --checkpoint snapshot mid-horizon "
+                         "(bitwise-equal on CPU to an uninterrupted "
+                         "run)")
     # lm
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--smoke", action="store_true", default=True)
