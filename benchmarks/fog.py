@@ -30,6 +30,9 @@ class BenchScale:
     tau: int = 5
     eta: float = 0.1
     repeats: int = 1
+    # cap on the device count the scale benches sweep to (0 = no cap);
+    # CI sets --max-n so sparse_scale stops at its n=10⁴ point
+    max_n: int = 0
 
 
 QUICK = BenchScale(n_train=8_000, n_test=2_000, T=20, tau=5)
@@ -132,9 +135,11 @@ class Scenario:
     activity: np.ndarray | None = None
     schedule: NetworkSchedule | None = None
     # "oracle" plans on the true schedule, "predict" on the estimated
-    # schedule (estimator.predict_schedule), "once" on the static base
-    # graph; True/False are legacy aliases for oracle/once. Predictive
-    # and plan-once plans are realized against the true schedule.
+    # schedule (estimator.predict_schedule), "expected" on the observed
+    # support with 1/availability link pricing (expected_cost_traces),
+    # "once" on the static base graph; True/False are legacy aliases
+    # for oracle/once. Non-oracle plans are realized against the true
+    # schedule.
     replan: bool | str = "oracle"
     # unannounced failures (core.faults.FaultSchedule): never visible
     # to the planner — crash outages only enter at realization, and
@@ -214,38 +219,51 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
 
 
 def _estimated(sc: Scenario):
-    """Imperfect-information settings plan on estimated traces/counts."""
+    """Imperfect-information settings plan on estimated traces/counts.
+
+    ``replan="expected"`` additionally reprices the planner's link
+    costs by 1/availability (``est.expected_cost_traces``) — the
+    cost-weighted half of expected planning; the support half lives in
+    ``_plan_network``."""
     if sc.setting in ("C", "E"):
-        return (est.estimate_traces(sc.traces),
-                est.estimate_counts(sc.D))
-    return sc.traces, sc.D
+        tr, D = (est.estimate_traces(sc.traces),
+                 est.estimate_counts(sc.D))
+    else:
+        tr, D = sc.traces, sc.D
+    if sc.schedule is not None and replan_mode(sc.replan) == "expected":
+        tr = est.expected_cost_traces(tr, sc.schedule)
+    return tr, D
 
 
 def replan_mode(replan) -> str:
-    """Normalize ``Scenario.replan``: "oracle" / "predict" / "once",
-    with the legacy booleans as aliases (True → oracle, False → once)."""
+    """Normalize ``Scenario.replan``: "oracle" / "predict" /
+    "expected" / "once", with the legacy booleans as aliases
+    (True → oracle, False → once)."""
     if replan is True:
         return "oracle"
     if replan is False:
         return "once"
-    if replan in ("oracle", "predict", "once"):
+    if replan in ("oracle", "predict", "expected", "once"):
         return replan
     raise ValueError(f"unknown replan mode {replan!r}; expected "
-                     "'oracle', 'predict', 'once' or a bool")
+                     "'oracle', 'predict', 'expected', 'once' or a bool")
 
 
 def _plan_network(sc: Scenario):
     """What the planner sees: the true schedule (oracle replanning),
     the schedule PREDICTED from the observed history (setting-C style
-    imperfect network information), or the static base graph
-    (plan-once)."""
+    imperfect network information; "expected" keeps the optimistic
+    observed support and pairs it with 1/availability link pricing in
+    ``_estimated``), or the static base graph (plan-once)."""
     if sc.schedule is None:
         return sc.adj
     mode = replan_mode(sc.replan)
     if mode == "oracle":
         return sc.schedule
-    if mode == "predict":
-        return est.predict_schedule(sc.schedule)
+    if mode in ("predict", "expected"):
+        return est.predict_schedule(
+            sc.schedule, mode="threshold" if mode == "predict"
+            else "expected")
     return sc.adj
 
 

@@ -141,6 +141,39 @@ def aggregate(W, H: jnp.ndarray, contributing: jnp.ndarray, prev_global):
     return w_new
 
 
+def aggregate_edges(W, H: jnp.ndarray, device_ids, prev_global, *,
+                    use_pallas=None):
+    """Eq. (4) with the contributing set as an explicit device LIST
+    (edge-list form) instead of a dense (n,) mask: w(k) = Σ H_i w_i /
+    Σ H_i over ``device_ids``, the H-weighted sums computed through the
+    segment-reduce kernel dispatch (``kernels.ops.segment_sum`` — one
+    segment per parameter, elements are the listed contributors). The
+    sparse twin of :func:`aggregate`: equal up to summation order for
+    the mask with exactly those ids set."""
+    from repro.kernels import ops
+    ids = jnp.asarray(device_ids, jnp.int32)
+    k = ids.shape[0]
+    Hc = H[ids]
+    tot = Hc.sum()
+
+    def agg(a):
+        P = int(np.prod(a.shape[1:], dtype=np.int64)) or 1
+        flat = a[ids].reshape(k, P) * Hc[:, None]        # (k, P)
+        seg = jnp.broadcast_to(jnp.arange(P, dtype=jnp.int32)[None],
+                               (k, P)).reshape(-1)
+        s = ops.segment_sum(flat.reshape(-1), seg, num_segments=P,
+                            use_pallas=use_pallas)
+        return jnp.where(tot > 0, s / jnp.maximum(tot, 1e-9),
+                         0.0).reshape(a.shape[1:]).astype(a.dtype)
+
+    w_new = jax.tree_util.tree_map(agg, W)
+    if prev_global is not None:
+        w_new = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(tot > 0, new, old), w_new,
+            prev_global)
+    return w_new
+
+
 def _sync(W, w_global, active):
     def s(stack, g):
         mask = active.reshape((-1,) + (1,) * g.ndim)
@@ -349,8 +382,10 @@ def run_rounds_scan(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
     run. ``stop_after`` (rounds; checkpointed runs only) simulates an
     interruption at the next window boundary — benches/tests use it to
     produce a mid-horizon checkpoint to resume from."""
-    T = len(processed)
-    n = len(processed[0])
+    if isinstance(processed, pl.FlatStreams):
+        T, n = processed.T, processed.n
+    else:
+        T, n = len(processed), len(processed[0])
     idx, yb, wts, counts = pl.stage_rounds(processed, y_tr, max_pts)
     is_agg = (np.arange(T) + 1) % tau == 0
 

@@ -19,9 +19,12 @@ known.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
-from repro.core.costs import CostTraces
+from repro.core import schedule as _schedule_mod
+from repro.core.costs import CostTraces, EdgeCostTraces
 from repro.core.schedule import NetworkSchedule
 
 
@@ -107,21 +110,49 @@ def window_activity_rates(schedule: NetworkSchedule,
                      for a, b in window_bounds(schedule.T, L)])
 
 
+def window_link_rates_edges(schedule: NetworkSchedule,
+                            L: int = DEFAULT_WINDOWS
+                            ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sparse per-edge window availability rates — O(W·E) memory, the
+    native estimator of the edge-list plane. Returns ``(src, dst,
+    rates)`` over the schedule's union support, ``rates`` (W, E) the
+    fraction of each window's rounds the edge was up (churn-masked
+    schedules fold endpoint exits in). Dense-mode schedules are
+    converted through ``to_edgelist`` first (small-n path)."""
+    sched = (schedule if schedule.storage == "edgelist"
+             else schedule.to_edgelist())
+    indptr, indices = sched.union_csr()
+    esrc = np.repeat(np.arange(sched.n, dtype=np.int64), np.diff(indptr))
+    bounds = window_bounds(sched.T, L)
+    rates = np.zeros((len(bounds), indices.size))
+    for w, (a, b) in enumerate(bounds):
+        for t in range(a, b):
+            rates[w, sched.edge_ids_at(t)] += 1.0
+        rates[w] /= max(b - a, 1)
+    return esrc, indices, rates
+
+
 def window_link_rates(schedule: NetworkSchedule,
                       L: int = DEFAULT_WINDOWS) -> np.ndarray:
     """(W, n, n) observed per-window link-availability rates: the
     fraction of the window's rounds each directed link was up in the
     observed adjacency (masked schedules fold endpoint churn in, so the
     rate is the realized availability the data plane experienced).
-    Memory is O(W·n²); the (T, n, n) stack is never materialized —
-    rounds stream through ``adj_at``'s reused buffer."""
-    out = []
-    for a, b in window_bounds(schedule.T, L):
-        acc = np.zeros((schedule.n, schedule.n))
-        for t in range(a, b):
-            acc += schedule.adj_at(t)
-        out.append(acc / max(b - a, 1))
-    return np.stack(out)
+
+    Implemented as sparse per-edge accumulation
+    (:func:`window_link_rates_edges`) scattered onto the dense (W, n, n)
+    return shape — the (T, n, n) stack is never materialized and the
+    accumulation itself is O(T·E). Above the dense-view size guard the
+    scatter would be the only O(n²) left, so it raises; use the edges
+    variant directly at scale."""
+    if schedule.n > _schedule_mod.DENSE_VIEW_MAX_N:
+        raise RuntimeError(
+            f"window_link_rates would materialize (W, {schedule.n}, "
+            f"{schedule.n}); use window_link_rates_edges at this scale")
+    esrc, edst, rates = window_link_rates_edges(schedule, L)
+    out = np.zeros((rates.shape[0], schedule.n, schedule.n))
+    out[:, esrc, edst] = rates
+    return out
 
 
 def predict_schedule(observed: NetworkSchedule, L: int = DEFAULT_WINDOWS,
@@ -137,34 +168,93 @@ def predict_schedule(observed: NetworkSchedule, L: int = DEFAULT_WINDOWS,
     * ``mode="threshold"`` — a link / device is predicted present iff
       its previous-window rate ≥ ``threshold`` (default 0.5: the Bayes
       predictor under 0-1 loss for a per-window Bernoulli model);
-    * ``mode="expected"`` — the expected SUPPORT: anything observed at
-      all in the previous window is planned against (optimistic — the
-      planner keeps intermittently-available links in the candidate
-      set and ``realize_plan`` charges the in-transit losses).
+    * ``mode="expected"`` — cost-weighted expected planning: anything
+      observed at all in the previous window stays in the candidate
+      support, and the planner is meant to price those links by their
+      expected per-delivered-datapoint cost — pair the schedule with
+      :func:`expected_cost_traces`, which scales ``c_link`` by
+      1/availability (the fog.py ``replan="expected"`` wiring does
+      both). ``realize_plan`` still charges the in-transit losses the
+      optimism incurs.
 
-    The result is piecewise-constant (event-list storage, O(n² + E)
-    memory) with the predicted per-round active trace attached, so the
-    schedule-aware solvers also avoid offloading toward devices
-    predicted to have churned out by the arrival round. Movement plans
-    solved against the prediction must then be realized against the
-    TRUE schedule — execution and costing always run on truth.
+    The result is piecewise-constant with the predicted per-round
+    active trace attached, so the schedule-aware solvers also avoid
+    offloading toward devices predicted to have churned out by the
+    arrival round. Dense observed schedules return event-list storage
+    (O(n² + E) memory); edge-list observed schedules return edge-list
+    piecewise storage (O(E) — no dense array is formed at any n).
+    Movement plans solved against the prediction must then be realized
+    against the TRUE schedule — execution and costing always run on
+    truth.
     """
     if mode not in ("threshold", "expected"):
         raise ValueError(f"unknown prediction mode {mode!r}; "
                          "expected 'threshold' or 'expected'")
     cut = threshold if mode == "threshold" else 1e-12
     bounds = window_bounds(observed.T, L)
-    link_rates = window_link_rates(observed, L)
     act_rates = window_activity_rates(observed, L)
-    adjs = [np.array(observed.adj_at(0), dtype=bool, copy=True)]
     active = np.empty((observed.T, observed.n), bool)
     a0, b0 = bounds[0]
     active[a0:b0] = np.asarray(observed.active_at(0), bool)
     for w in range(1, len(bounds)):
-        adjs.append(link_rates[w - 1] >= cut)
         a, b = bounds[w]
         active[a:b] = act_rates[w - 1] >= cut
+    if observed.storage == "edgelist":
+        esrc, edst, link_rates = window_link_rates_edges(observed, L)
+        edge_sets = [observed.edges_at(0)]
+        for w in range(1, len(bounds)):
+            keep = link_rates[w - 1] >= cut
+            edge_sets.append((esrc[keep], edst[keep]))
+        return NetworkSchedule.piecewise_edges(observed.n, edge_sets,
+                                               bounds, active=active)
+    link_rates = window_link_rates(observed, L)
+    adjs = [np.array(observed.adj_at(0), dtype=bool, copy=True)]
+    for w in range(1, len(bounds)):
+        adjs.append(link_rates[w - 1] >= cut)
     return NetworkSchedule.piecewise(adjs, bounds, active=active)
+
+
+def expected_cost_traces(traces: CostTraces | EdgeCostTraces,
+                         observed: NetworkSchedule,
+                         L: int = DEFAULT_WINDOWS, *,
+                         floor: float = 0.05
+                         ) -> CostTraces | EdgeCostTraces:
+    """Availability-weighted link costs for ``mode="expected"``
+    planning: within window l, every link's ``c_link`` is scaled by
+    1 / max(previous-window availability, ``floor``) — the expected
+    per-DELIVERED-datapoint transfer cost under a per-window Bernoulli
+    link model (a link up 25% of the time costs 4× per successful
+    offload). Window 0 keeps the unscaled costs (round-0 truth is
+    known). ``floor`` caps the penalty so a single lucky observation
+    cannot price a link at 20×+ and a zero-rate link (absent from the
+    predicted support anyway) stays finite.
+
+    Works on dense :class:`CostTraces` ((T, n, n) scaling on the
+    observed union support) and on :class:`EdgeCostTraces` (O(W·E):
+    rates are mapped onto the trace support through ``edge_ids``).
+    """
+    bounds = window_bounds(observed.T, L)
+    if isinstance(traces, EdgeCostTraces):
+        esrc, edst, rates = window_link_rates_edges(observed, L)
+        eids = traces.edge_ids(esrc, edst)
+        hit = eids >= 0
+        c_link = np.array(traces.c_link, copy=True)
+        for w in range(1, len(bounds)):
+            scale = np.ones(traces.E)
+            r = rates[w - 1][hit]
+            scale[eids[hit]] = np.where(
+                r > 0.0, 1.0 / np.maximum(r, floor), 1.0)
+            a, b = bounds[w]
+            c_link[a:b] *= scale[None, :]
+        return dataclasses.replace(traces, c_link=c_link)
+    rates = window_link_rates(observed, L)
+    c_link = np.array(traces.c_link, copy=True)
+    for w in range(1, len(bounds)):
+        r = rates[w - 1]
+        scale = np.where(r > 0.0, 1.0 / np.maximum(r, floor), 1.0)
+        a, b = bounds[w]
+        c_link[a:b] *= scale[None]
+    return dataclasses.replace(traces, c_link=c_link)
 
 
 def schedule_prediction_accuracy(predicted: NetworkSchedule,

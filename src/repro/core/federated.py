@@ -113,6 +113,9 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     hist = _history_base(cfg, y_tr, streams, processed, act_all)
 
     engine = eng.resolve_engine(engine)
+    if isinstance(streams, pl.FlatStreams) and engine != "scan":
+        raise ValueError("FlatStreams sparse staging is a scan-engine "
+                         f"feature; got engine={engine!r}")
     fault_kw = {}
     if faults is not None:
         fault_kw = dict(faults=faults, guard=guard, quorum=quorum)
@@ -151,7 +154,13 @@ def _prepare_streams(cfg: FedConfig, data, plan, streams, activity,
                      schedule, faults=None):
     """Host-side data-plane prep shared by the single and batched run
     paths: default streams, schedule→activity, fault-outage masking,
-    inactive-collection zeroing, movement routing, pad sizing."""
+    inactive-collection zeroing, movement routing, pad sizing.
+
+    ``streams`` may be a :class:`repro.data.pipeline.FlatStreams` — the
+    sparse staging path: activity masking, bang-bang movement routing
+    and round staging all run as vectorized array ops over the flat
+    sample table (O(samples)), so nothing O(n²) — and no (n, n) array
+    at all — is built on the way into the compiled engine."""
     _, y_tr, _, _ = data
     rng = np.random.default_rng(cfg.seed)
     if streams is None:
@@ -174,12 +183,22 @@ def _prepare_streams(cfg: FedConfig, data, plan, streams, activity,
         base = (np.asarray(activity, bool) if activity is not None
                 else np.ones((cfg.T, cfg.n), bool))
         activity = base & faults.activity_mask()
-    if activity is not None:
-        # inactive devices collect nothing (no-op for all-active masks,
-        # e.g. a constant schedule)
-        for t, i in zip(*np.nonzero(~np.asarray(activity, bool))):
-            streams.collected[t][i] = np.empty(0, np.int64)
-    processed = pl.apply_movement(streams, plan, rng)
+    if isinstance(streams, pl.FlatStreams):
+        if activity is not None:
+            act = np.asarray(activity, bool)
+            keep = act[streams.t, streams.dev]
+            streams = pl.FlatStreams(t=streams.t[keep],
+                                     dev=streams.dev[keep],
+                                     idx=streams.idx[keep],
+                                     n=streams.n, T=streams.T)
+        processed = pl.apply_movement_flat(streams, plan, rng)
+    else:
+        if activity is not None:
+            # inactive devices collect nothing (no-op for all-active
+            # masks, e.g. a constant schedule)
+            for t, i in zip(*np.nonzero(~np.asarray(activity, bool))):
+                streams.collected[t][i] = np.empty(0, np.int64)
+        processed = pl.apply_movement(streams, plan, rng)
     max_pts = pl.pad_size(processed, cfg.max_points)
     act_all = (np.asarray(activity, bool) if activity is not None
                else np.ones((cfg.T, cfg.n), bool))
@@ -189,9 +208,19 @@ def _prepare_streams(cfg: FedConfig, data, plan, streams, activity,
 def _history_base(cfg: FedConfig, y_tr, streams, processed,
                   act_all) -> dict:
     """History skeleton: rounds, Fig. 4b label-similarity diagnostics,
-    activity masks and processed counts (the engine fills the rest)."""
+    activity masks and processed counts (the engine fills the rest).
+
+    On the flat-stream path the O(n²) pairwise label-similarity
+    diagnostics are skipped (``None``) — they are a small-n figure, and
+    computing them at fog scale would defeat the sparse staging."""
     hist = {"round": list(range(cfg.T)), "sim_before": None,
             "sim_after": None}
+    hist["active"] = [act_all[t].copy() for t in range(cfg.T)]
+    if isinstance(processed, pl.FlatStreams):
+        cnt = np.bincount(processed.cell_key(),
+                          minlength=cfg.T * cfg.n).reshape(cfg.T, cfg.n)
+        hist["processed_counts"] = [row for row in cnt]
+        return hist
     col_labels = [np.concatenate([y_tr[ix] for row in streams.collected
                                   for ix in [row[i]]] or [np.empty(0, int)])
                   for i in range(cfg.n)]
@@ -200,7 +229,6 @@ def _history_base(cfg: FedConfig, y_tr, streams, processed,
                    for i in range(cfg.n)]
     hist["sim_before"] = pl.label_similarity(col_labels)
     hist["sim_after"] = pl.label_similarity(proc_labels)
-    hist["active"] = [act_all[t].copy() for t in range(cfg.T)]
     hist["processed_counts"] = [[len(ix) for ix in processed[t]]
                                 for t in range(cfg.T)]
     return hist

@@ -59,7 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costs import CostTraces
+from repro.core.costs import CostTraces, EdgeCostTraces
 from repro.core.schedule import as_schedule
 
 
@@ -225,8 +225,8 @@ class MovementPlan:
             off = src != dst
             if not off.any():
                 continue
-            a = np.asarray(sched.adj_at(t), bool)
-            lost = qty[off] * ~a[src[off], dst[off]]
+            present = sched.has_edges(t, src[off], dst[off])
+            lost = qty[off] * ~present
             assert np.all(lost <= atol), \
                 f"offload over missing link at round {t}"
 
@@ -304,6 +304,8 @@ def greedy_linear(traces: CostTraces, adj, *,
     Schedules without churn (raw matrices, stacks, constant/flap
     schedules) are bitwise unaffected.
     """
+    if isinstance(traces, EdgeCostTraces):
+        return greedy_linear_edges(traces, adj)
     T, n = traces.c_node.shape
     sched = as_schedule(adj, T)
     if backend == "auto":
@@ -342,6 +344,89 @@ def greedy_linear(traces: CostTraces, adj, *,
         off_cost[t] = buf[dg, k[t]]
     choice = np.argmin(
         np.stack([traces.c_node, off_cost, traces.f_err]), axis=0)
+    return _plan_from_choice(choice, k)
+
+
+def _support_live(etraces: EdgeCostTraces, sched) -> np.ndarray:
+    """(T, E) liveness of the cost-support edges under the schedule —
+    the sparse replacement for per-round dense adjacency rows. O(T·E)
+    bool; edge-list schedules never touch a dense view, dense-mode
+    schedules fall back to ``adj_at`` gathers (small-n equivalence)."""
+    T, n = etraces.c_node.shape
+    live = np.zeros((T, etraces.E), bool)
+    if getattr(sched, "storage", None) == "edgelist":
+        iu, idx = sched.union_csr()
+        usrc = np.repeat(np.arange(n, dtype=np.int64), np.diff(iu))
+        umap = etraces.edge_ids(usrc, idx)   # union eid -> support eid
+        for t in range(T):
+            ids = umap[sched.edge_ids_at(t)]
+            live[t, ids[ids >= 0]] = True
+    else:
+        esrc = etraces.src
+        for t in range(T):
+            a = np.asarray(sched.adj_at(t), bool)
+            live[t] = a[esrc, etraces.indices]
+    return live
+
+
+def _segment_min_csr(eff: np.ndarray, indptr: np.ndarray,
+                     esrc: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """First-occurrence segment min over CSR rows: per-row minimum of
+    ``eff`` and the edge id achieving it (−1 for rows with no finite
+    entry). First-min tie-breaking in lex (dst) order — exactly
+    ``argmin`` over a dense row restricted to the support."""
+    n = indptr.shape[0] - 1
+    E = eff.shape[0]
+    rowmin = np.full(n, np.inf)
+    rowarg = np.full(n, -1, np.int64)
+    if E == 0:
+        return rowmin, rowarg
+    starts = np.minimum(indptr[:-1], E - 1)
+    mins = np.minimum.reduceat(eff, starts)
+    nonempty = indptr[:-1] < indptr[1:]
+    rowmin[nonempty] = mins[nonempty]
+    finite = np.isfinite(rowmin)
+    # first edge per row attaining the min (positions ascend within rows)
+    cand = np.nonzero(np.isfinite(eff) & (eff == rowmin[esrc]))[0]
+    rows, first = np.unique(esrc[cand], return_index=True)
+    rowarg[rows] = cand[first]
+    rowmin[~finite] = np.inf
+    rowarg[~finite] = -1
+    return rowmin, rowarg
+
+
+def greedy_linear_edges(etraces: EdgeCostTraces, adj) -> MovementPlan:
+    """Theorem 3 greedy on the sparse edge support — O(T·E) end to end.
+
+    The per-round candidate reduction is a first-occurrence segment min
+    over the support CSR instead of a dense (n, n) argmin, so the plan
+    is bitwise-equal to ``greedy_linear`` on the gathered dense costs
+    (same float arithmetic, same lex tie-breaking) while never touching
+    an (n, n) array. Receiver-aware exactly like the dense path:
+    devices inactive at the arrival round t+1 leave round t's candidate
+    set."""
+    T, n = etraces.c_node.shape
+    sched = as_schedule(adj, T)
+    indices, indptr, esrc = etraces.indices, etraces.indptr, etraces.src
+    act = sched.activity()
+    recv = act[1:] if not act.all() else None
+    notself = esrc != indices
+    live_all = _support_live(etraces, sched)
+    c_next = np.concatenate([etraces.c_node[1:], etraces.c_node[-1:]])
+    k = np.zeros((T, n), np.int64)
+    off_cost = np.full((T, n), np.inf)   # T-1: no off-horizon offloading
+    eff = np.empty(etraces.E)
+    for t in range(T - 1):
+        np.add(etraces.c_link[t], c_next[t][indices], out=eff)
+        dead = ~(live_all[t] & notself)
+        if recv is not None:             # receiver gone at arrival t+1
+            dead |= ~recv[t][indices]
+        eff[dead] = np.inf
+        rowmin, rowarg = _segment_min_csr(eff, indptr, esrc)
+        off_cost[t] = rowmin
+        k[t] = np.where(rowarg >= 0, indices[np.maximum(rowarg, 0)], 0)
+    choice = np.argmin(
+        np.stack([etraces.c_node, off_cost, etraces.f_err]), axis=0)
     return _plan_from_choice(choice, k)
 
 
@@ -647,8 +732,9 @@ def realize_plan(plan: MovementPlan, schedule) -> MovementPlan:
         off = src != dst
         if not off.any():
             continue
-        a = np.asarray(sched.adj_at(t), bool)
-        lost = off & ~a[src, dst]
+        present = np.zeros(len(src), bool)
+        present[off] = sched.has_edges(t, src[off], dst[off])
+        lost = off & ~present
         if t + 1 < T:                    # arrival round: receiver gone
             act_next = np.asarray(sched.active_at(t + 1), bool)
             lost |= off & ~act_next[dst]
@@ -681,23 +767,35 @@ def repair_capacities_edges(plan: MovementPlan, traces: CostTraces,
     T, n = plan.r.shape
     sched = as_schedule(adj, T)
     kk = max(1, min(k, n - 1))
+    sparse_costs = isinstance(traces, EdgeCostTraces)
     topk: tuple | None = None
 
     def _topk():
         """k-best min-plus candidates, solved LAZILY on the first spill:
         feasible plans pass through without paying the device transfer
-        or the top-k program (c_link is (T, n, n) dense in CostTraces
-        already, so the batched solve adds no asymptotic memory)."""
+        or the top-k program. Dense CostTraces run the batched (T,n,n)
+        solve (no asymptotic memory added); EdgeCostTraces run the CSR
+        variant on (T, E) costs + schedule liveness — no dense
+        adjacency view is ever requested, so edge-list schedules repair
+        above the dense size guard."""
         nonlocal topk
         if topk is None:
             from repro.kernels import ops
 
             c_next = np.concatenate([traces.c_node[1:],
                                      traces.c_node[-1:]])
-            cc, cd = ops.topk_neighbors(
-                jnp.asarray(traces.c_link, jnp.float32),
-                jnp.asarray(c_next, jnp.float32),
-                jnp.asarray(sched.adj_view()), k=kk)
+            if sparse_costs:
+                live = _support_live(traces, sched)
+                live &= traces.src != traces.indices
+                cc, cd = ops.topk_neighbors_csr(
+                    np.asarray(traces.c_link, np.float32),
+                    np.asarray(c_next, np.float32),
+                    traces.indptr, traces.indices, live, k=kk)
+            else:
+                cc, cd = ops.topk_neighbors(
+                    jnp.asarray(traces.c_link, jnp.float32),
+                    jnp.asarray(c_next, jnp.float32),
+                    jnp.asarray(sched.adj_view()), k=kk)
             topk = (np.asarray(cc), np.asarray(cd))
         return topk
 
@@ -713,6 +811,14 @@ def repair_capacities_edges(plan: MovementPlan, traces: CostTraces,
                 + float(q)
         Dt = D[t]
         cap_link_t = traces.cap_link[t]
+        if sparse_costs:
+            def _cl(i, j):
+                """Per-edge link capacity (0 for off-support pairs)."""
+                eid = traces.edge_ids([i], [j])[0]
+                return float(cap_link_t[eid]) if eid >= 0 else 0.0
+        else:
+            def _cl(i, j):
+                return cap_link_t[i, j]
         local_next = diag0[t + 1] * D[t + 1] if t + 1 < T else None
         inc = np.zeros(n)
         for (i, j), q in share.items():
@@ -728,12 +834,12 @@ def repair_capacities_edges(plan: MovementPlan, traces: CostTraces,
                     if frac <= 1e-12:
                         return
                     cost = cand_cost[t, i, c]
-                    if not np.isfinite(cost):
-                        break            # ascending order: rest invalid
                     j2 = int(cand[t, i, c])
+                    if not np.isfinite(cost) or j2 < 0:
+                        break            # ascending order: rest invalid
                     cur_q = share.get((i, j2), 0.0)
                     head = min(
-                        cap_link_t[i, j2] - cur_q * Dt[i],
+                        _cl(i, j2) - cur_q * Dt[i],
                         traces.cap_node[t + 1, j2] - local_next[j2]
                         - inc[j2])
                     put = min(frac, head / max(Dt[i], 1e-12))
@@ -755,8 +861,8 @@ def repair_capacities_edges(plan: MovementPlan, traces: CostTraces,
         # _place may have grown an edge processed later in the sweep)
         for i, j in sorted(k_ for k_ in share if k_[0] != k_[1]):
             q = share[(i, j)]
-            if q > 0.0 and q * Dt[i] > cap_link_t[i, j]:
-                spill = q - cap_link_t[i, j] / max(Dt[i], 1e-12)
+            if q > 0.0 and q * Dt[i] > _cl(i, j):
+                spill = q - _cl(i, j) / max(Dt[i], 1e-12)
                 share[(i, j)] = q - spill
                 inc[j] -= spill * Dt[i]
                 _place(i, spill)
@@ -980,7 +1086,13 @@ def plan_cost(plan: MovementPlan, traces: CostTraces, D: np.ndarray, *,
     off = e.src != e.dst
     te, se, de, qe = e.t[off], e.src[off], e.dst[off], e.qty[off]
     proc = float(np.sum(G * traces.c_node))
-    trans = float(np.sum(qe * D[te, se] * traces.c_link[te, se, de]))
+    if isinstance(traces, EdgeCostTraces):
+        eids = traces.edge_ids(se, de)       # plan edges live on support
+        c_edge = np.where(eids >= 0,
+                          traces.c_link[te, np.maximum(eids, 0)], 0.0)
+        trans = float(np.sum(qe * D[te, se] * c_edge))
+    else:
+        trans = float(np.sum(qe * D[te, se] * traces.c_link[te, se, de]))
     if error_model == "sqrt":
         disc = float(np.sum(traces.f_err * gamma / np.sqrt(G + 1e-3)))
     elif error_model == "neg_G":

@@ -13,12 +13,21 @@ import jax
 
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.offload_greedy import (offload_greedy,
                                           offload_greedy_batched,
                                           offload_greedy_edges)
+from repro.kernels.segment_reduce import (segment_max_pallas,
+                                          segment_sum_pallas)
 from repro.kernels.ssd_scan import ssd_scan
+
+# dispatch segment reductions to the Pallas kernel above this element
+# count (accelerators only — on CPU the kernel runs in interpret mode
+# and the fused jnp scatter wins); mirrors movement.PALLAS_MIN_N
+PALLAS_MIN_N = 256
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "use_pallas"))
@@ -75,12 +84,87 @@ def greedy_edges_batched(c_link, c_next, c_node, f_err, adj, *,
 @partial(jax.jit, static_argnames=("k",))
 def topk_neighbors(c_link, c_next, adj, *, k=2):
     """Top-k cheapest offload targets per (t, i): masked min-plus over
-    out-neighbors, returned as (costs (T,n,k), dst (T,n,k)) in ascending
-    cost order. k=1 reproduces the kernel's (best_cost, best_j); larger
-    k feeds repair-style next-best fallbacks without a re-solve."""
+    out-neighbors, returned as (costs (T,n,k'), dst (T,n,k')) in
+    ascending cost order with k' = min(k, n). k=1 reproduces the
+    kernel's (best_cost, best_j); larger k feeds repair-style next-best
+    fallbacks without a re-solve.
+
+    Rows whose out-degree is below k are padded with (inf, -1): the
+    effective per-row k is clamped to the degree, so downstream
+    placement can never route to the arbitrary indices ``lax.top_k``
+    reports for all-masked ties."""
     T, n = c_next.shape
+    kk = min(k, n)
     eff = c_link + c_next[:, None, :]
     eye = jnp.eye(n, dtype=bool)
     eff = jnp.where(adj & ~eye[None], eff, jnp.inf)
-    neg, idx = jax.lax.top_k(-eff, k)
-    return -neg, idx
+    neg, idx = jax.lax.top_k(-eff, kk)
+    cost = -neg
+    return cost, jnp.where(jnp.isfinite(cost), idx, -1)
+
+
+def topk_neighbors_csr(c_link_e, c_next, indptr, indices, live, *, k=2):
+    """CSR-input generalization of :func:`topk_neighbors` — the O(E)
+    path for edge-cost traces. ``c_link_e`` (T, E) per-edge costs over
+    the lex-sorted support (``indptr``/``indices``), ``live`` (T, E)
+    per-round edge liveness (schedule replay). Returns (costs
+    (T,n,k'), dst (T,n,k')) with k' = min(k, max degree), ascending,
+    padded with (inf, -1) — identical selection and tie-breaking to the
+    dense variant on gathered costs (support order is dst order).
+
+    Host-side prep builds a (n, maxdeg) padded edge-id table (numpy);
+    the reduction itself is one jit'd program."""
+    indptr = np.asarray(indptr)
+    deg = np.diff(indptr)
+    n = deg.shape[0]
+    E = int(indptr[-1])
+    maxdeg = max(int(deg.max()) if n else 0, 1)
+    pad = np.full((n, maxdeg), -1, np.int64)
+    slot = np.arange(maxdeg)[None, :] < deg[:, None]
+    pad[slot] = np.arange(E)
+    kk = min(k, maxdeg)
+    return _topk_csr_core(jnp.asarray(c_link_e), jnp.asarray(c_next),
+                          jnp.asarray(indices), jnp.asarray(live),
+                          jnp.asarray(pad), k=kk)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _topk_csr_core(c_link_e, c_next, indices, live, pad, *, k):
+    T = c_next.shape[0]
+    n, maxdeg = pad.shape
+    safe = jnp.maximum(pad, 0)
+    dstp = indices[safe]                          # (n, maxdeg)
+    eff = c_link_e[:, safe] + c_next[:, dstp]     # (T, n, maxdeg)
+    valid = (pad >= 0)[None] & live[:, safe]
+    eff = jnp.where(valid, eff, jnp.inf)
+    neg, pidx = jax.lax.top_k(-eff, k)
+    cost = -neg
+    dst = jnp.take_along_axis(
+        jnp.broadcast_to(dstp[None], (T, n, maxdeg)), pidx, axis=2)
+    return cost, jnp.where(jnp.isfinite(cost), dst, -1)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "use_pallas"))
+def segment_sum(data, segment_ids, *, num_segments, use_pallas=None):
+    """out[s] = Σ data[segment_ids == s] over (E,) edge data. Pallas
+    one-hot-matmul kernel on accelerators above PALLAS_MIN_N elements,
+    fused jnp scatter otherwise (bitwise oracle)."""
+    if use_pallas is None:
+        use_pallas = (jax.default_backend() != "cpu"
+                      and data.shape[0] >= PALLAS_MIN_N)
+    if use_pallas:
+        return segment_sum_pallas(data, segment_ids, num_segments)
+    return jax.ops.segment_sum(jnp.asarray(data, jnp.float32),
+                               segment_ids, num_segments=num_segments)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "use_pallas"))
+def segment_max(data, segment_ids, *, num_segments, use_pallas=None):
+    """out[s] = max data[segment_ids == s] (−inf for empty segments)."""
+    if use_pallas is None:
+        use_pallas = (jax.default_backend() != "cpu"
+                      and data.shape[0] >= PALLAS_MIN_N)
+    if use_pallas:
+        return segment_max_pallas(data, segment_ids, num_segments)
+    return jax.ops.segment_max(jnp.asarray(data, jnp.float32),
+                               segment_ids, num_segments=num_segments)

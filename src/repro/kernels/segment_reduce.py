@@ -1,0 +1,105 @@
+"""Pallas segment-reduce kernels (sum / max) for the sparse network
+plane.
+
+The O(E) plane replaces dense (n, n) reductions with reductions over
+edge lists: per-device gather of incoming shares (sum of plan-edge
+volumes grouped by receiver) and H-weighted aggregation over an active
+device list. Both are segment reductions ``out[s] = op over
+data[segment_ids == s]``.
+
+Kernel shape: elements are padded/reshaped to (chunks, CHUNK) and
+segments to (tiles, BS); the grid is (segment tiles × element chunks)
+with the chunk axis ``arbitrary`` so each output tile is revisited and
+accumulated in place (same discipline as ``offload_greedy``'s column
+sweep). Each (tile, chunk) step builds the one-hot membership matrix
+``hit[s, c] = (ids[c] == tile_base + s)`` and reduces it — a (BS, CHUNK)
+matmul for sum (MXU-friendly) and a masked row-max for max. Segment ids
+need NOT be sorted.
+
+Empty segments match the jnp fallback identities (``jax.ops``):
+0 for sum, −inf for max. On CPU the kernel runs in interpret mode;
+``kernels.ops.segment_sum`` / ``segment_max`` pick the jnp fallback
+below ``PALLAS_MIN_N`` elements or off-accelerator.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+BS = 128      # segment tile (lane dimension of the output)
+CHUNK = 128   # element chunk reduced per grid step
+
+
+def _seg_kernel(ids_ref, data_ref, out_ref, *, op: str):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(
+            out_ref, 0.0 if op == "sum" else -jnp.inf)
+
+    si = pl.program_id(0)
+    ids = ids_ref[0, :]                                   # (CHUNK,) int32
+    vals = data_ref[0, :].astype(jnp.float32)             # (CHUNK,)
+    rows = si * BS + jax.lax.broadcasted_iota(jnp.int32, (BS, CHUNK), 0)
+    hit = rows == ids[None, :]                            # (BS, CHUNK)
+    if op == "sum":
+        acc = jnp.dot(hit.astype(jnp.float32), vals[:, None],
+                      preferred_element_type=jnp.float32)[:, 0]
+        out_ref[0, :] += acc
+    else:
+        masked = jnp.where(hit, vals[None, :], -jnp.inf)
+        out_ref[0, :] = jnp.maximum(out_ref[0, :], masked.max(axis=1))
+
+
+def _segment_reduce(data, segment_ids, num_segments: int, op: str,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    E = data.shape[0]
+    nchunks = max(1, -(-E // CHUNK))
+    ntiles = max(1, -(-num_segments // BS))
+    epad = nchunks * CHUNK - E
+    # padded elements point one past the last segment tile: they match
+    # no output row, so padding contributes the identity
+    ids = jnp.concatenate([
+        jnp.asarray(segment_ids, jnp.int32),
+        jnp.full((epad,), ntiles * BS, jnp.int32)]).reshape(nchunks, CHUNK)
+    vals = jnp.concatenate([
+        jnp.asarray(data, jnp.float32),
+        jnp.zeros((epad,), jnp.float32)]).reshape(nchunks, CHUNK)
+    out = pl.pallas_call(
+        partial(_seg_kernel, op=op),
+        grid=(ntiles, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, CHUNK), lambda si, cj: (cj, 0)),
+            pl.BlockSpec((1, CHUNK), lambda si, cj: (cj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BS), lambda si, cj: (si, 0)),
+        out_shape=jax.ShapeDtypeStruct((ntiles, BS), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(ids, vals)
+    return out.reshape(-1)[:num_segments]
+
+
+def segment_sum_pallas(data, segment_ids, num_segments: int, *,
+                       interpret: bool | None = None):
+    """out[s] = Σ data[segment_ids == s]; empty segments give 0."""
+    return _segment_reduce(data, segment_ids, num_segments, "sum",
+                           interpret)
+
+
+def segment_max_pallas(data, segment_ids, num_segments: int, *,
+                       interpret: bool | None = None):
+    """out[s] = max data[segment_ids == s]; empty segments give −inf."""
+    return _segment_reduce(data, segment_ids, num_segments, "max",
+                           interpret)

@@ -26,6 +26,22 @@ def mlp_apply(params, x):
     return h @ params["w2"] + params["b2"]
 
 
+def linear_specs(n_classes: int = 10, pooled: int = 7) -> dict:
+    return {
+        "w": Spec((pooled * pooled, n_classes), (None, None)),
+        "b": Spec((n_classes,), (None,), init="zeros"),
+    }
+
+
+def linear_apply(params, x):
+    """x (B, 28, 28) -> logits (B, 10): 4×4 average pooling down to
+    7×7, then one linear layer — ~500 params/device, the model the
+    fog-scale (n = 10⁵ devices) benches stack without blowing memory."""
+    B = x.shape[0]
+    h = x.reshape(B, 7, 4, 7, 4).mean(axis=(2, 4)).reshape(B, 49)
+    return h @ params["w"] + params["b"]
+
+
 def cnn_specs(n_classes: int = 10) -> dict:
     return {
         "c1": Spec((5, 5, 1, 16), (None, None, None, None)),
@@ -76,4 +92,5 @@ def accuracy(logits, labels):
 MODELS = {
     "mlp": (mlp_specs, mlp_apply),
     "cnn": (cnn_specs, cnn_apply),
+    "linear": (linear_specs, linear_apply),
 }

@@ -227,3 +227,42 @@ def test_topk_neighbors_first_column_is_argmin():
     eff = tr.c_link + c_next[:, None, :]
     eff = np.where(adj[None] & ~np.eye(n, dtype=bool)[None], eff, np.inf)
     np.testing.assert_allclose(costs[..., 0], eff.min(2), rtol=1e-6)
+
+
+def test_topk_neighbors_pads_low_degree_rows():
+    """Regression: rows with out-degree < k must pad with (inf, -1) —
+    lax.top_k reports arbitrary indices for all-masked ties, which
+    placement would then treat as real neighbors."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    T, n, k = 2, 8, 3
+    adj = np.zeros((n, n), bool)
+    adj[0, 1] = adj[1, 0] = adj[1, 2] = True     # deg(0)=1, deg(1)=2
+    rng = np.random.default_rng(5)
+    c_link = rng.random((T, n, n))
+    c_next = rng.random((T, n))
+    costs, idx = ops.topk_neighbors(
+        jnp.asarray(c_link, jnp.float32), jnp.asarray(c_next, jnp.float32),
+        jnp.asarray(np.broadcast_to(adj, (T, n, n))), k=k)
+    costs, idx = np.asarray(costs), np.asarray(idx)
+    for t in range(T):
+        assert idx[t, 0, 0] == 1 and np.all(idx[t, 0, 1:] == -1)
+        assert np.isinf(costs[t, 0, 1:]).all()
+        assert set(idx[t, 1, :2]) == {0, 2} and idx[t, 1, 2] == -1
+        # isolated rows are fully padded
+        assert np.all(idx[t, 3] == -1) and np.isinf(costs[t, 3]).all()
+    # CSR variant agrees on the same topology
+    src, dst = np.nonzero(adj)
+    keys = np.argsort(src * n + dst, kind="stable")
+    src, dst = src[keys], dst[keys]
+    indptr = np.searchsorted(src, np.arange(n + 1))
+    live = np.ones((T, len(src)), bool)
+    cc, cd = ops.topk_neighbors_csr(
+        np.asarray(c_link[:, src, dst], np.float32),
+        np.asarray(c_next, np.float32), indptr, dst, live, k=k)
+    cc, cd = np.asarray(cc), np.asarray(cd)
+    kk = cc.shape[-1]
+    np.testing.assert_array_equal(cd, idx[..., :kk])
+    np.testing.assert_allclose(cc, costs[..., :kk], rtol=1e-6)

@@ -1,0 +1,367 @@
+"""The fully sparse O(E) network plane (PR 7).
+
+Equivalence suite pinning the edge-list schedule storage, the sparse
+producers, the movement solvers, the window-rate estimator and the
+engine histories to their dense oracles at small n — every comparison
+is bitwise (``array_equal``), not approximate — plus the no-dense
+guards: ``DENSE_VIEW_MAX_N`` raising on dense views, and a
+tracemalloc-traced plan/predict cycle at n=4096 that never allocates
+an (n, n) numpy array.
+"""
+import tracemalloc
+
+import numpy as np
+import pytest
+
+import repro.core.schedule as schedule_mod
+from repro.core import estimator as est
+from repro.core import federated as F
+from repro.core import movement as mv
+from repro.core import topology as topo
+from repro.core.costs import (CostTraces, edge_costs_from_dense,
+                              synthetic_costs, synthetic_edge_costs)
+from repro.core.schedule import (DENSE_VIEW_MAX_N, NetEvent,
+                                 NetworkSchedule)
+from repro.data import pipeline as pl
+
+
+def _dense_pair(n, T, *, kind="churn", seed=7, deg=4):
+    """(edge-list schedule, dense-oracle schedule) over the same base
+    topology with identical producer seeding."""
+    rng = np.random.default_rng(0)
+    src, dst = topo.random_sparse_edges(n, deg, rng)
+    A = np.zeros((n, n), bool)
+    A[src, dst] = True
+    if kind == "churn":
+        se = topo.churn_schedule_edges(n, src, dst, T, 0.1, 0.3,
+                                       np.random.default_rng(seed))
+        sd = topo.churn_schedule(A, T, 0.1, 0.3,
+                                 np.random.default_rng(seed))
+    else:
+        se = topo.link_flap_schedule_edges(n, src, dst, T,
+                                           np.random.default_rng(seed),
+                                           p_down=0.2, p_up=0.5)
+        sd = se            # flap rng streams differ dense-vs-sparse;
+        # flap equivalence is replay-vs-to_edgelist (tested below)
+    return se, sd, (src, dst, A)
+
+
+def _same_replay(a, b, T):
+    for t in range(T):
+        sa, da = a.edges_at(t)
+        sb, db = b.edges_at(t)
+        if not (np.array_equal(sa, sb) and np.array_equal(da, db)):
+            return False
+        if not np.array_equal(a.active_at(t), b.active_at(t)):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# edge-list storage vs dense replay
+# ---------------------------------------------------------------------------
+
+
+def test_churn_edgelist_matches_dense_masked_replay():
+    n, T = 48, 12
+    se, sd, _ = _dense_pair(n, T, kind="churn")
+    assert se.storage == "edgelist"
+    assert _same_replay(se, sd, T)
+    for t in range(T):
+        assert np.array_equal(se.adj_at(t), sd.adj_at(t))
+    assert np.array_equal(se.activity(), sd.activity())
+
+
+def test_to_edgelist_roundtrips_every_dense_mode():
+    rng = np.random.default_rng(3)
+    n, T = 24, 10
+    A = topo.random_graph(n, 0.3, rng)
+    scheds = [
+        NetworkSchedule.constant(A, T),
+        NetworkSchedule.full(np.stack([topo.random_graph(n, 0.3, rng)
+                                       for _ in range(T)])),
+        topo.link_flap_schedule(A, T, np.random.default_rng(5),
+                                p_down=0.2, p_up=0.5),
+        topo.churn_schedule(A, T, 0.1, 0.3, np.random.default_rng(7)),
+    ]
+    for sd in scheds:
+        se = sd.to_edgelist()
+        assert se.storage == "edgelist"
+        assert _same_replay(se, sd, T)
+        # events agree too (entry/exit from the activity trace)
+        assert se.events_in(0, T) == sd.events_in(0, T)
+
+
+def test_edgelist_array_events_equal_netevent_events():
+    n, T = 32, 9
+    rng = np.random.default_rng(1)
+    src, dst = topo.random_sparse_edges(n, 3, rng)
+    picks = rng.integers(0, src.size, 6)
+    t_arr = np.array([1, 2, 3, 4, 6, 8])
+    up_arr = np.array([False, False, True, False, True, True])
+    evs = [NetEvent(int(t), "link_up" if u else "link_down",
+                    int(src[p]), int(dst[p]))
+           for t, u, p in zip(t_arr, up_arr, picks)]
+    s_list = NetworkSchedule.edgelist(n, T, src, dst, events=evs)
+    s_arr = NetworkSchedule.edgelist(
+        n, T, src, dst,
+        events=(t_arr, src[picks], dst[picks], up_arr))
+    assert _same_replay(s_list, s_arr, T)
+    assert s_list.events_in(0, T) == s_arr.events_in(0, T)
+    # random access restarts the replay cursor correctly
+    assert np.array_equal(s_arr.edges_at(8)[0], s_list.edges_at(8)[0])
+    assert np.array_equal(s_arr.edges_at(1)[0], s_list.edges_at(1)[0])
+
+
+def test_piecewise_edges_matches_dense_piecewise():
+    n = 20
+    rng = np.random.default_rng(2)
+    adjs = [topo.random_graph(n, 0.4, rng) for _ in range(3)]
+    bounds = [(0, 3), (3, 6), (6, 10)]
+    sd = NetworkSchedule.piecewise(adjs, bounds)
+    edge_sets = [tuple(np.nonzero(a)) for a in adjs]
+    se = NetworkSchedule.piecewise_edges(n, edge_sets, bounds)
+    assert se.storage == "edgelist"
+    assert _same_replay(se, sd.to_edgelist(), 10)
+
+
+def test_edgelist_accessors_agree():
+    n, T = 40, 8
+    se, sd, (src, dst, A) = _dense_pair(n, T)
+    for t in range(T):
+        s, d = se.edges_at(t)
+        # neighbors_at == per-row slices of edges_at
+        for i in (0, 3, n - 1):
+            assert np.array_equal(se.neighbors_at(t, i), d[s == i])
+        # edge_ids_at indexes the union CSR back onto edges_at
+        indptr, indices = se.union_csr()
+        ids = se.edge_ids_at(t)
+        usrc = np.repeat(np.arange(n), np.diff(indptr))
+        assert np.array_equal(usrc[ids], s)
+        assert np.array_equal(indices[ids], d)
+        # has_edges: positive on live edges, negative on dead/absent
+        assert se.has_edges(t, s, d).all()
+        assert not se.has_edges(t, [0], [0]).any() or A[0, 0]
+
+
+def test_dense_view_guard_raises_above_max_n():
+    n = DENSE_VIEW_MAX_N + 1
+    src = np.arange(0, n - 1, dtype=np.int64)
+    dst = src + 1
+    se = NetworkSchedule.edgelist(n, 4, src, dst)
+    with pytest.raises(RuntimeError, match="DENSE_VIEW_MAX_N"):
+        se.adj_at(0)
+    with pytest.raises(RuntimeError):
+        se.adj_view()
+    # sparse accessors still serve
+    s, d = se.edges_at(3)
+    assert s.size == n - 1 and np.array_equal(d, dst)
+
+
+def test_unknown_event_edge_rejected():
+    src = np.array([0, 1])
+    dst = np.array([1, 2])
+    sched = NetworkSchedule.edgelist(4, 4, src, dst)
+    csr = sched.union_csr()
+    with pytest.raises(ValueError, match="union support"):
+        NetworkSchedule(4, 4, edge_csr=(csr[0], csr[1],
+                                        np.ones(2, bool)),
+                        edge_events=(np.array([1]), np.array([3]),
+                                     np.array([0]), np.array([True])))
+
+
+# ---------------------------------------------------------------------------
+# movement: sparse solvers vs dense oracles
+# ---------------------------------------------------------------------------
+
+
+def _cost_pair(n, T, seed=1):
+    """(EdgeCostTraces, dense CostTraces) with identical per-edge cost
+    streams on the same support."""
+    rng = np.random.default_rng(0)
+    src, dst = topo.random_sparse_edges(n, 4, rng)
+    tr = synthetic_costs(n, T, np.random.default_rng(seed))
+    etr = edge_costs_from_dense(tr, src, dst)
+    A = np.zeros((n, n), bool)
+    A[src, dst] = True
+    return etr, tr, A, (src, dst)
+
+
+def test_greedy_realize_sparse_equals_dense_oracle():
+    n, T = 40, 10
+    etr, tr, A, (src, dst) = _cost_pair(n, T)
+    # dense path must only see costs on the support
+    mask = ~A
+    tr.c_link[:, mask] = 0.0
+    tr.c_link[:, src, dst] = etr.c_link
+    sd = topo.churn_schedule(A, T, 0.1, 0.3, np.random.default_rng(9))
+    se = topo.churn_schedule_edges(n, src, dst, T, 0.1, 0.3,
+                                   np.random.default_rng(9))
+    plan_d = mv.realize_plan(mv.greedy_linear(tr, sd), sd)
+    plan_s = mv.realize_plan(mv.greedy_linear(etr, se), se)
+    assert mv.plans_equal(plan_s, plan_d)
+    plan_s.check(se)
+    # realized plans only use live links
+    e = plan_s.edges
+    for t in range(T):
+        sel = e.t == t
+        off = e.src[sel] != e.dst[sel]
+        assert se.has_edges(t, e.src[sel][off], e.dst[sel][off]).all()
+
+
+def test_repair_edges_above_dense_guard(monkeypatch):
+    # edge-native repair must work where dense views raise
+    monkeypatch.setattr(schedule_mod, "DENSE_VIEW_MAX_N", 16)
+    n, T = 24, 6
+    etr, tr, A, (src, dst) = _cost_pair(n, T)
+    se = topo.churn_schedule_edges(n, src, dst, T, 0.05, 0.3,
+                                   np.random.default_rng(4))
+    with pytest.raises(RuntimeError):
+        se.adj_at(0)
+    plan = mv.realize_plan(mv.greedy_linear(etr, se), se)
+    D = np.full((T, n), 3.0)
+    out = mv.repair_capacities_edges(plan, etr, se, D)
+    out.check(se)
+
+
+# ---------------------------------------------------------------------------
+# estimator: sparse window rates + prediction vs dense
+# ---------------------------------------------------------------------------
+
+
+def test_window_link_rates_sparse_equals_dense():
+    n, T = 36, 16
+    se, sd, _ = _dense_pair(n, T)
+    dense = est.window_link_rates(sd)
+    esrc, edst, rates = est.window_link_rates_edges(se)
+    scat = np.zeros_like(dense)
+    scat[:, esrc, edst] = rates
+    assert np.array_equal(scat, dense)
+
+
+@pytest.mark.parametrize("mode", ["threshold", "expected"])
+def test_predict_schedule_sparse_equals_dense(mode):
+    n, T = 36, 16
+    se, sd, _ = _dense_pair(n, T)
+    pe = est.predict_schedule(se, mode=mode)
+    pd_ = est.predict_schedule(sd, mode=mode)
+    assert pe.storage == "edgelist"
+    assert _same_replay(pe, pd_.to_edgelist(), T)
+
+
+def test_window_link_rates_dense_raises_at_scale():
+    n = DENSE_VIEW_MAX_N + 1
+    src = np.arange(0, n - 1, dtype=np.int64)
+    se = NetworkSchedule.edgelist(n, 4, src, src + 1)
+    with pytest.raises(RuntimeError):
+        est.window_link_rates(se)
+    esrc, edst, rates = est.window_link_rates_edges(se)   # sparse fine
+    assert rates.shape[1] == esrc.size == n - 1
+
+
+def test_expected_cost_traces_sparse_equals_dense():
+    n, T = 30, 16
+    etr, tr, A, (src, dst) = _cost_pair(n, T)
+    tr.c_link[:, src, dst] = etr.c_link
+    se = topo.churn_schedule_edges(n, src, dst, T, 0.1, 0.3,
+                                   np.random.default_rng(9))
+    sd = topo.churn_schedule(A, T, 0.1, 0.3, np.random.default_rng(9))
+    xd = est.expected_cost_traces(tr, sd)
+    xe = est.expected_cost_traces(etr, se)
+    assert np.array_equal(xe.c_link, xd.c_link[:, src, dst])
+    # window 0 is unscaled; later windows only ever scale UP
+    (a0, b0) = est.window_bounds(T, est.DEFAULT_WINDOWS)[0]
+    assert np.array_equal(xe.c_link[a0:b0], etr.c_link[a0:b0])
+    assert (xe.c_link >= etr.c_link - 1e-12).all()
+
+
+# ---------------------------------------------------------------------------
+# engine histories: dense vs edge-list schedule, list vs flat streams
+# ---------------------------------------------------------------------------
+
+
+def test_engine_history_bitwise_dense_vs_edgelist(small_images):
+    n, T, tau = 16, 6, 3
+    x_tr, y_tr, x_te, y_te = small_images
+    rng = np.random.default_rng(0)
+    src, dst = topo.random_sparse_edges(n, 4, rng)
+    A = np.zeros((n, n), bool)
+    A[src, dst] = True
+    tr = synthetic_costs(n, T, np.random.default_rng(1))
+    sd = topo.churn_schedule(A, T, 0.1, 0.3, np.random.default_rng(2))
+    se = topo.churn_schedule_edges(n, src, dst, T, 0.1, 0.3,
+                                   np.random.default_rng(2))
+    streams = pl.poisson_streams(n, T, y_tr, rng=np.random.default_rng(3),
+                                 mean_per_round=2.0)
+    plan = mv.realize_plan(mv.greedy_linear(tr, sd), sd)
+    cfg = F.FedConfig(n=n, T=T, tau=tau, eta=0.05, model="mlp", seed=0)
+    data = (x_tr, y_tr, x_te, y_te)
+    hd = F.run_network_aware(cfg, data, tr, A, plan, streams=streams,
+                             schedule=sd, engine="scan")
+    he = F.run_network_aware(cfg, data, tr, A, plan, streams=streams,
+                             schedule=se, engine="scan")
+    for key in ("test_acc", "test_loss"):
+        assert np.array_equal(np.asarray(hd[key]), np.asarray(he[key]))
+
+
+def test_engine_history_flat_streams_matches_lists(small_images):
+    n, T, tau = 12, 6, 3
+    x_tr, y_tr, x_te, y_te = small_images
+    rng = np.random.default_rng(0)
+    src, dst = topo.random_sparse_edges(n, 4, rng)
+    se = topo.churn_schedule_edges(n, src, dst, T, 0.1, 0.3,
+                                   np.random.default_rng(2))
+    etr = synthetic_edge_costs(n, T, src, dst, np.random.default_rng(1))
+    plan = mv.realize_plan(mv.greedy_linear(etr, se), se)
+    streams = pl.poisson_streams(n, T, y_tr, rng=np.random.default_rng(3),
+                                 mean_per_round=2.0)
+    flat = pl.flat_from_streams(streams)
+    cfg = F.FedConfig(n=n, T=T, tau=tau, eta=0.05, model="mlp", seed=0)
+    data = (x_tr, y_tr, x_te, y_te)
+    hl = F.run_network_aware(cfg, data, etr, None, plan, streams=streams,
+                             schedule=se, engine="scan")
+    hf = F.run_network_aware(cfg, data, etr, None, plan, streams=flat,
+                             schedule=se, engine="scan")
+    assert np.array_equal(np.asarray(hl["test_acc"]),
+                          np.asarray(hf["test_acc"]))
+    assert np.array_equal(np.asarray(hl["test_loss"]),
+                          np.asarray(hf["test_loss"]))
+
+
+def test_flat_streams_reject_non_scan_engines(small_images):
+    n, T = 6, 4
+    x_tr, y_tr, x_te, y_te = small_images
+    flat = pl.poisson_streams_flat(n, T, y_tr,
+                                   rng=np.random.default_rng(0),
+                                   mean_per_round=1.0)
+    cfg = F.FedConfig(n=n, T=T, tau=2, eta=0.05, model="mlp", seed=0)
+    with pytest.raises(ValueError, match="scan"):
+        F.run_network_aware(cfg, (x_tr, y_tr, x_te, y_te),
+                            synthetic_costs(n, T, np.random.default_rng(1)),
+                            topo.fully_connected(n),
+                            mv.no_movement_plan(T, n), streams=flat,
+                            engine="reference")
+
+
+# ---------------------------------------------------------------------------
+# no-dense unit guard: plan + predict at n=4096 without any (n, n)
+# ---------------------------------------------------------------------------
+
+
+def test_no_dense_nn_alloc_at_4096():
+    n, T, deg = 4096, 6, 4
+    rng = np.random.default_rng(0)
+    src, dst = topo.random_sparse_edges(n, deg, rng)
+    tracemalloc.start()
+    sched = topo.churn_schedule_edges(n, src, dst, T, 0.05, 0.2,
+                                      np.random.default_rng(7))
+    etr = synthetic_edge_costs(n, T, src, dst, np.random.default_rng(1))
+    plan = mv.realize_plan(mv.greedy_linear(etr, sched), sched)
+    pred = est.predict_schedule(sched)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert len(plan.edges) > 0 and pred.storage == "edgelist"
+    # one bool (n, n) alone is n² bytes; the whole cycle stays under it
+    assert peak < n * n, (
+        f"peak {peak} bytes >= n²={n * n}: a dense (n, n) fits "
+        "under the sparse plan/predict cycle")
