@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import numpy as np
 
@@ -348,26 +349,76 @@ def scenario_bucket_key(sc: Scenario, *, bucket: str = "pow2") -> tuple:
             float(sc.quorum) if sc.faults is not None else 0.0)
 
 
+def _group_dims(prepared, tau: int, bucket: str) -> dict:
+    """Padded bucket dims of one group (dense AND ragged stagings),
+    computed from the prepared streams — the cost model's shape
+    inputs."""
+    processed_list = [p[1] for p in prepared]
+    points = []
+    for (st, processed, act_all, max_pts) in prepared:
+        if isinstance(processed, pl.FlatStreams):
+            T_, n = processed.T, processed.n
+        else:
+            T_, n = len(processed), len(processed[0])
+        points.append((T_, n, int(max_pts)))
+    cap = pl.BUCKET_MAX_INFLATION
+    T_b = max(pl.bucket_rounds(T_, tau, bucket) for T_, _, _ in points)
+    n_b = max(pl.bucket_size(n, bucket, max_inflation=cap)
+              for _, n, _ in points)
+    P_b = pl.bucket_size(max(P for _, _, P in points), bucket,
+                         max_inflation=cap)
+    rows = pl.ragged_rows(processed_list)
+    R_b = pl.bucket_size(max(int(rows.max()) if rows.size else 1, 1),
+                         bucket, max_inflation=cap)
+    return {"points": points, "T_b": T_b, "n_b": n_b, "P_b": P_b,
+            "R_b": R_b, "chunk": pl.RAGGED_CHUNK}
+
+
+def _point_ident(sc: Scenario) -> tuple:
+    """Prep-free identity of one point's compiled loop program: the
+    config fields that determine its staged shapes (the stream seed
+    fixes the Poisson sample counts, churn fixes the activity mask)."""
+    cfg = sc.cfg
+    return (cfg.T, cfg.n, cfg.seed, cfg.p_exit, cfg.p_entry)
+
+
 def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
                   train=True, engine="auto", iters=400, seed=0,
                   batch: bool | None = None, bucket: str = "pow2",
-                  plans: list | None = None, mesh="auto") -> list[dict]:
+                  plans: list | None = None, mesh="auto",
+                  staging: str | None = None) -> list[dict]:
     """Solve + evaluate + (optionally) train a whole sweep.
 
     Convex plans: one compiled program per (T, n) group. Training
-    defaults to the scenario-BATCHED engine: points are grouped into
-    shape buckets (:func:`scenario_bucket_key`) and every bucket trains
-    in ONE compiled program (``run_network_aware_batched`` — vmapped
-    scenario axis, sharded across the "data" mesh on multi-device
-    hosts, whole-bucket eval drained by one stacked AsyncEvaluator
-    dispatch). ``batch=False`` (or a per-point ``engine`` of
+    groups points into shape buckets (:func:`scenario_bucket_key`) and
+    dispatches EACH bucket through the cost model
+    (``core.costmodel``): predicted cost = padded work slots × per-slot
+    cost + predicted compiles × measured compile cost, for the
+    per-point loop, the dense-batched and the ragged-batched program
+    (``run_network_aware_batched`` — vmapped scenario axis, whole-
+    bucket eval drained by one stacked AsyncEvaluator dispatch).
+    Single-point buckets short-circuit to the loop path. The decision
+    is recorded in every row's ``"dispatch"`` field.
+
+    ``engine="batched"`` (or ``batch=True``) forces every bucket onto
+    the batched path; ``batch=False`` (or a per-point ``engine`` of
     "scan"/"sharded"/"legacy") keeps the original per-point dispatch
     loop — the oracle the batched path is equivalence-tested against.
+    ``staging``: ``None`` defaults to cost-model choice under dispatch
+    and to "dense" under a forced batched engine (preserving the
+    historical bitwise contract); "auto" always lets the model pick
+    dense vs ragged; "dense"/"ragged" pin the batched staging.
     ``plans`` short-circuits the solve (a bench that times both paths
     hands the same plans to each). ``mesh``: "auto" shards the batched
     path across all visible devices on multi-device hosts, ``None``
-    forces single-device programs, an explicit mesh is used as-is.
+    forces single-device programs, an explicit mesh is used as-is
+    (ragged staging requires a single-device program and is excluded
+    from the choice when a mesh would be used).
     """
+    import jax
+
+    from repro.core import costmodel as cm
+    from repro.core import engine as eng
     from repro.core.engine import resolve_engine
 
     if plans is None:
@@ -377,31 +428,93 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
         # explicit batch=False always wins (even with engine="batched",
         # which then runs per point through the S=1 bucket program)
         batch = engine in ("auto", "batched") and len(scenarios) > 1
+    # cost-model dispatch only when nothing forces a path: the default
+    # engine="auto" sweep; engine="batched" forces batched buckets
+    force_batched = engine == "batched" or (batch and engine != "auto")
     hists: list = [None] * len(scenarios)
-    engine_name = ("batched" if batch
-                   else resolve_engine(engine or "auto"))
+    engines: list = [("batched" if batch
+                      else resolve_engine(engine or "auto"))] \
+        * len(scenarios)
+    dispatches: list = [None] * len(scenarios)
     if train and batch:
+        cm.install_listener()
+        allow_ragged = mesh is None or (mesh == "auto"
+                                        and jax.device_count() == 1)
         groups: dict[tuple, list[int]] = {}
         for b, sc in enumerate(scenarios):
             groups.setdefault(scenario_bucket_key(sc, bucket=bucket),
                               []).append(b)
-        for idxs in groups.values():
+        for gkey, idxs in groups.items():
             fault_list = [scenarios[b].faults for b in idxs]
             any_faults = any(f is not None for f in fault_list)
-            outs = F.run_network_aware_batched(
-                [scenarios[b].cfg for b in idxs], data,
-                [plans[b] for b in idxs],
-                streams=[scenarios[b].streams for b in idxs],
-                activities=[scenarios[b].activity for b in idxs],
-                schedules=[scenarios[b].schedule for b in idxs],
-                mesh=mesh, bucket=bucket,
-                faults=fault_list if any_faults else None,
-                # the bucket key groups by (guard, quorum), so the
-                # group's config is any member's config
-                guard=scenarios[idxs[0]].guard,
-                quorum=scenarios[idxs[0]].quorum)
-            for b, hist in zip(idxs, outs):
-                hists[b] = hist
+            t_prep0 = time.perf_counter()
+            prepared = []
+            for b in idxs:
+                sc = scenarios[b]
+                prepared.append(F._prepare_streams(
+                    sc.cfg, data, plans[b], sc.streams, sc.activity,
+                    sc.schedule, sc.faults))
+            eng.add_phase_time("stage_s",
+                               time.perf_counter() - t_prep0)
+            tau = scenarios[idxs[0]].cfg.tau
+            dims = _group_dims(prepared, tau, bucket)
+            dims["idents"] = [_point_ident(scenarios[b]) for b in idxs]
+            # test-eval work is path-independent: Σ windows × n_test
+            dims["eval_slots"] = sum(T_ // tau for T_, _, _
+                                     in dims["points"]) * scale.n_test
+            pin = staging
+            if pin is None:
+                # forced batched keeps the historical dense staging
+                # (its bitwise contract); dispatch mode lets the model
+                # choose
+                pin = "dense" if force_batched else "auto"
+            if pin == "auto" and not allow_ragged:
+                pin = "dense"
+            decision = cm.MODEL.choose(
+                key=gkey, force_path="batched" if force_batched
+                else None, staging=None if pin == "auto" else pin,
+                **dims)
+            t0 = time.perf_counter()
+            compiles0 = cm.MODEL.compile_events
+            if decision.path == "batched":
+                outs = F.run_network_aware_batched(
+                    [scenarios[b].cfg for b in idxs], data,
+                    [plans[b] for b in idxs],
+                    streams=[scenarios[b].streams for b in idxs],
+                    activities=[scenarios[b].activity for b in idxs],
+                    schedules=[scenarios[b].schedule for b in idxs],
+                    mesh=mesh, bucket=bucket, staging=decision.staging,
+                    prepared=prepared,
+                    faults=fault_list if any_faults else None,
+                    # the bucket key groups by (guard, quorum), so the
+                    # group's config is any member's config
+                    guard=scenarios[idxs[0]].guard,
+                    quorum=scenarios[idxs[0]].quorum)
+                for b, hist in zip(idxs, outs):
+                    hists[b] = hist
+                    engines[b] = "batched"
+            else:
+                loop_engine = resolve_engine("auto")
+                for i, b in enumerate(idxs):
+                    sc = scenarios[b]
+                    hists[b] = F.run_network_aware(
+                        sc.cfg, data, sc.traces, sc.adj, plans[b],
+                        streams=sc.streams, activity=sc.activity,
+                        schedule=sc.schedule, engine=loop_engine,
+                        mesh=None if mesh == "auto" else mesh,
+                        faults=sc.faults, guard=sc.guard,
+                        quorum=sc.quorum, prepared=prepared[i])
+                    engines[b] = loop_engine
+            ran = ("loop" if decision.path == "loop"
+                   else f"batched-{decision.staging}")
+            cm.MODEL.observe_run(
+                decision.path, decision.staging,
+                decision.slots.get(ran, 0), time.perf_counter() - t0,
+                cm.MODEL.compile_events - compiles0,
+                n_points=len(idxs), eval_slots=dims["eval_slots"])
+            cm.MODEL.record(decision, key=gkey, **dims)
+            for b in idxs:
+                dispatches[b] = decision.as_row()
     elif train:
         for b, (sc, plan) in enumerate(zip(scenarios, plans)):
             hists[b] = F.run_network_aware(sc.cfg, data, sc.traces,
@@ -409,18 +522,27 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
                                            streams=sc.streams,
                                            activity=sc.activity,
                                            schedule=sc.schedule,
-                                           engine=engine_name,
+                                           engine=engines[b],
                                            mesh=None if mesh == "auto"
                                            else mesh,
                                            faults=sc.faults,
                                            guard=sc.guard,
                                            quorum=sc.quorum)
+        # a forced loop sweep compiles its per-point programs: tell
+        # the cost model, so later dispatched sweeps price the loop
+        # path as warm
+        for sc in scenarios:
+            cm.MODEL.mark_loop_seen(
+                scenario_bucket_key(sc, bucket=bucket),
+                [_point_ident(sc)])
     rows = []
-    for sc, plan, hist in zip(scenarios, plans, hists):
+    for b, (sc, plan, hist) in enumerate(zip(scenarios, plans, hists)):
         cost = mv.plan_cost(plan, sc.traces, sc.D,
                             error_model=sc.error_model, gamma=sc.gamma)
         out = {**sc.key, "setting": sc.setting, "cost": cost,
-               "engine": engine_name}
+               "engine": engines[b]}
+        if dispatches[b] is not None:
+            out["dispatch"] = dispatches[b]
         if hist is not None:
             out.update(acc=hist["test_acc"][-1],
                        acc_curve=hist["test_acc"],

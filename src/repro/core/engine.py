@@ -120,6 +120,22 @@ def _device_step_fn(apply_fn, eta):
     return one
 
 
+def _row_loss_fn(apply_fn):
+    """UNNORMALIZED weighted CE of one ragged chunk row — the summand
+    of ``mm.ce_loss``'s numerator. The ragged engine sums these per
+    device through the segment reduce and divides by the staged sample
+    count afterwards (the counts equal the dense path's ``w.sum()``
+    exactly: 0/1 weights sum to exact integers), so the per-device loss
+    and gradient match the dense step up to summation order."""
+
+    def lf(p, xb, yb, w):
+        logp = jax.nn.log_softmax(apply_fn(p, xb).astype(jnp.float32))
+        ll = jnp.take_along_axis(logp, yb[:, None], axis=1)[:, 0]
+        return -(ll * w).sum()
+
+    return lf
+
+
 def make_device_step(apply_fn, eta):
     return jax.jit(jax.vmap(_device_step_fn(apply_fn, eta)))
 
@@ -698,10 +714,25 @@ def batched_compile_count() -> int:
 
 def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
                     faults: bool = False, guard: bool = False,
-                    quorum: float = 0.0):
+                    quorum: float = 0.0, staging: str = "dense"):
     """One program per (model, η, staging mode, mesh, fault config) —
     jit retraces once per shape bucket, so a whole sweep compiles
     #buckets programs.
+
+    ``staging="ragged"`` swaps the per-round device slabs for the
+    chunk-row tables of ``pipeline.stage_scenario_ragged``: each round
+    gathers the (R_b, C) rows' owner parameters off the flat (S·n)
+    device stack, runs one vmapped value_and_grad over rows, and
+    segment-reduces losses/gradients back onto their devices (phantom
+    rows land in the trash segment S·n). Per-round work is then
+    proportional to the bucket's ACTUAL sample total instead of
+    S·n·P_max. Everything outside the round body — windows, deferred
+    aggregation, faults, quorum, sync — is byte-for-byte the dense
+    trace, because the device axis stays (S, n). Ragged mode is
+    single-program only (mesh must be None); its bitwise guarantee is
+    in-bucket == alone under RAGGED staging (the CPU scatter-add
+    applies row updates in row order, which is extent-independent per
+    segment), not equality with the dense slab reduction.
 
     The scenario axis S leads every operand and is vmapped; inside a
     mesh (``mesh`` not None) the fog-device axis n is additionally
@@ -734,7 +765,10 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
     clean program, bit for bit.
     """
     global _EVICTED_BUCKET_COMPILES
-    key = (apply_fn, eta, prestage, mesh, faults, guard, quorum)
+    if staging == "ragged" and mesh is not None:
+        raise ValueError("ragged staging is single-program only; "
+                         "pass mesh=None")
+    key = (apply_fn, eta, prestage, mesh, faults, guard, quorum, staging)
     cached = _BUCKET_PROGRAMS.get(key)
     if cached is not None:
         _BUCKET_PROGRAMS.move_to_end(key)
@@ -750,8 +784,50 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
     # (and therefore its bits) independent of the scenario-axis extent,
     # so batched lanes stay bitwise-equal to per-point runs on CPU
     vstep = jax.vmap(jax.vmap(_device_step_fn(apply_fn, eta)))
+    vrow = jax.vmap(_row_loss_fn(apply_fn))
     axis = "data"
     tree_map = jax.tree_util.tree_map
+    ragged = staging == "ragged"
+
+    def ragged_round(W, xb, yb, w, cell, cnt, active):
+        """One ragged round: differentiate the summed per-row loss
+        THROUGH the row-param gather, so the gather's transpose — a
+        deterministic row-index-order scatter-add, i.e. exactly the
+        ``segment_sum`` reduction — accumulates per-device gradients
+        without ever materializing a (rows, param) gradient stack
+        (~1.4× faster than the explicit vmap(grad) + segment_sum
+        formulation on CPU). Phantom rows carry the trash cell id S·n,
+        which the clipped gather maps to row S·n−1: their zero sample
+        weights make every contribution a signed zero, and x + ±0.0
+        preserves x, so the last device's bits are untouched. The
+        per-device loss denominator is the STAGED count (== the dense
+        w.sum() exactly, see ``_row_loss_fn``); devices without data
+        get loss 0.0 and a zero-scaled update, like the dense step."""
+        from repro.kernels import ops
+
+        S_loc, n_loc = cnt.shape
+        M = S_loc * n_loc
+        denom = jnp.maximum(cnt.reshape(M), 1.0)
+        scale = (active * jnp.minimum(cnt, 1.0)).reshape(M)
+        Wf = tree_map(lambda p: p.reshape((M,) + p.shape[2:]), W)
+
+        def bucket_loss(Wf):
+            Wr = tree_map(lambda p: jnp.take(p, cell, axis=0,
+                                             mode="clip"), Wf)
+            rloss = vrow(Wr, xb, yb, w)
+            return rloss.sum(), rloss
+
+        (_, rloss), g = jax.value_and_grad(bucket_loss,
+                                           has_aux=True)(Wf)
+        lsum = ops.segment_sum_rows(rloss, cell, num_segments=M + 1)[:M]
+        losses = (lsum / denom).reshape(S_loc, n_loc)
+
+        def upd(p, flat, gs):
+            sh = (M,) + (1,) * (gs.ndim - 1)
+            gs = gs / denom.reshape(sh)
+            return (flat - eta * scale.reshape(sh) * gs).reshape(p.shape)
+
+        return tree_map(upd, W, Wf, g), losses
 
     def agg_sums(W, H, contributing):
         """Numerator/denominator of eq. (4) — psum-reduced on a mesh.
@@ -811,13 +887,13 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
             expd = jax.lax.psum(expd, axis)
         return num, tot, surv, expd
 
-    def train(W0, wg0, x_tr, xb_all, idx_all, yb_all, w_all,
+    def train(W0, wg0, x_tr, xb_all, idx_all, yb_all, w_all, cell_all,
               counts, act, agg_w, *fault_ops):
         def window(carry, xs):
             if faults:
                 (W, wg, H, waiting, p_num, p_tot, p_act, p_flag,
                  p_surv, p_expd) = carry
-                xb, idx, yb, w, cnt, a, agg, upl, cor = xs
+                *rows, cnt, a, agg, upl, cor = xs
                 # the quorum decision for the previous window lands
                 # here, with its deferred sums: survivors below the
                 # quorum fraction kill the whole aggregation event
@@ -826,7 +902,7 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
                 p_flag = p_flag * qok_f
             else:
                 W, wg, H, waiting, p_num, p_tot, p_act, p_flag = carry
-                xb, idx, yb, w, cnt, a, agg = xs
+                *rows, cnt, a, agg = xs
             # prologue: REALIZE the aggregation issued by the previous
             # window's epilogue (divide + sync + waiting bookkeeping)
             wg = finalize(p_num, p_tot, p_flag, wg)
@@ -851,14 +927,21 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
 
             def round_body(c, rxs):
                 W, H = c
-                xb_r, idx_r, yb_r, w_r, cnt_r, a_r = rxs
-                if not prestage:
-                    xb_r = jnp.take(x_tr, idx_r, axis=0)
-                W, losses = vstep(W, xb_r, yb_r, w_r, a_r)
+                if ragged:
+                    xb_r, ridx_r, ryb_r, rw_r, rcell_r, cnt_r, a_r = rxs
+                    if not prestage:
+                        xb_r = jnp.take(x_tr, ridx_r, axis=0)
+                    W, losses = ragged_round(W, xb_r, ryb_r, rw_r,
+                                             rcell_r, cnt_r, a_r)
+                else:
+                    xb_r, idx_r, yb_r, w_r, cnt_r, a_r = rxs
+                    if not prestage:
+                        xb_r = jnp.take(x_tr, idx_r, axis=0)
+                    W, losses = vstep(W, xb_r, yb_r, w_r, a_r)
                 return (W, H + cnt_r * a_r), losses
 
             (W, H), losses = jax.lax.scan(
-                round_body, (W, H), (xb, idx, yb, w, cnt, act_eff))
+                round_body, (W, H), tuple(rows) + (cnt, act_eff))
             # epilogue: ISSUE this window's H-weighted sums; consumption
             # is deferred to the next prologue (double-buffered carry),
             # so on the sharded path the cross-shard psum of window w
@@ -886,8 +969,10 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
         if faults:
             carry0 = carry0 + (jnp.zeros(S, jnp.float32),
                                jnp.zeros(S, jnp.float32))
-        xs = (xb_all, idx_all, yb_all, w_all, counts, act, agg_w)
-        xs = xs + tuple(fault_ops)
+        xs = (xb_all, idx_all, yb_all, w_all)
+        if ragged:
+            xs = xs + (cell_all,)
+        xs = xs + (counts, act, agg_w) + tuple(fault_ops)
         carry, ys = jax.lax.scan(
             window, carry0, xs, unroll=2 if mesh is not None else 1)
         # the ys entry of window w is the global params BEFORE its
@@ -922,8 +1007,8 @@ def _bucket_program(apply_fn, eta: float, prestage: bool, mesh,
         dev = P(None, axis)                  # (S, n, ...) params stack
         w_dev = P(None, None, None, axis)    # (windows, tau, S, n, ...)
         wl_dev = P(None, None, axis)         # (windows, S, n) fault views
-        in_specs = (dev, P(), P(), w_dev, w_dev, w_dev, w_dev, w_dev,
-                    w_dev, P())
+        in_specs = (dev, P(), P(), w_dev, w_dev, w_dev, w_dev, P(),
+                    w_dev, w_dev, P())
         out_specs = (w_dev, P(None, None, axis), P())
         if faults:
             in_specs = in_specs + (wl_dev, wl_dev)
@@ -944,10 +1029,206 @@ def _pad_axis(a, size: int, axis: int):
     return np.pad(a, pad)
 
 
+# ---------------------------------------------------------------------------
+# warm re-staging cache: repeat sweeps (replan studies, fault grids,
+# --repeat timing runs) re-enter run_rounds_batched with byte-identical
+# streams; staging them again costs host gather/scatter time plus a
+# fresh host->device upload per operand. The cache keys the STAGED
+# device operands by a fingerprint of the pre-staging inputs (stream
+# bytes, activity, fault views, dataset identity, staging/bucket/τ
+# config), so a warm re-run reuses the device buffers outright. Safe
+# under donation: the only donated argument of the bucket programs is
+# the parameter stack W0, which is staged fresh per call — cached
+# operands are never donated. Bytes-capped LRU like the other caches.
+# ---------------------------------------------------------------------------
+_STAGED_CACHE_LIMIT_BYTES = 512 * 1024 ** 2
+_STAGED_CACHE: collections.OrderedDict = collections.OrderedDict()
+_STAGED_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def staged_cache_stats() -> dict:
+    """{'hits', 'misses'} of the warm re-staging cache (process-wide)."""
+    return dict(_STAGED_CACHE_STATS)
+
+
+def reset_staged_cache() -> None:
+    _STAGED_CACHE.clear()
+    _STAGED_CACHE_STATS.update(hits=0, misses=0)
+
+
+def _staged_nbytes(args) -> int:
+    return sum(int(a.nbytes) for a in jax.tree_util.tree_leaves(args)
+               if hasattr(a, "nbytes"))
+
+
+def _staged_cache_put(key, args, meta) -> None:
+    nbytes = _staged_nbytes(args)
+    if nbytes > _STAGED_CACHE_LIMIT_BYTES:
+        return                          # larger than the whole cache
+    used = sum(e[2] for e in _STAGED_CACHE.values())
+    while _STAGED_CACHE and used + nbytes > _STAGED_CACHE_LIMIT_BYTES:
+        _, evicted = _STAGED_CACHE.popitem(last=False)
+        used -= evicted[2]
+    _STAGED_CACHE[key] = (args, meta, nbytes)
+
+
+def _array_identity(arr) -> tuple:
+    """Cheap dataset fingerprint: shape/dtype plus a sampled checksum
+    (the `_to_device_cached` convention — sparse in-place edits can
+    slip through, engine inputs are treated as immutable)."""
+    a = np.asarray(arr)
+    flat = a.reshape(-1)
+    sample = flat[::max(1, flat.size // 4096)]
+    return (a.shape, str(a.dtype),
+            float(np.asarray(sample, np.float64).sum()))
+
+
+def _staged_fingerprint(processed_list, act_list, tau, bucket, staging,
+                        max_points, mesh_shape, faults, x_tr, y_tr):
+    """blake2b over everything the staged operands are a function of."""
+    import hashlib
+
+    h = hashlib.blake2b(digest_size=16)
+    mp = None if max_points is None else tuple(int(v) for v in max_points)
+    h.update(repr((int(tau), bucket, staging, mp, mesh_shape,
+                   _array_identity(x_tr), _array_identity(y_tr))).encode())
+    for b, p in enumerate(processed_list):
+        lens, ids = pl._cell_table(p)
+        h.update(lens.tobytes())
+        h.update(np.ascontiguousarray(ids).tobytes())
+        h.update(np.ascontiguousarray(
+            np.asarray(act_list[b], np.float32)).tobytes())
+        f = None if faults is None else faults[b]
+        if f is None:
+            h.update(b"\x00nofault")
+        else:
+            for v in f.engine_arrays():
+                h.update(np.ascontiguousarray(
+                    np.asarray(v, np.float32)).tobytes())
+    return h.digest()
+
+
+# per-phase wall-clock accumulators for the batched path, surfaced in
+# bench breakdowns: "stage" covers host staging + fingerprint + upload
+# dispatch, "train" the program dispatch + eval drain + history
+# assembly ("program"/"eval" are the two big slices inside "train").
+# Reset/read around a timed region via the accessors.
+_PHASE = {"stage_s": 0.0, "program_s": 0.0, "eval_s": 0.0,
+          "train_s": 0.0}
+
+
+def phase_timings() -> dict:
+    return dict(_PHASE)
+
+
+def reset_phase_timings() -> None:
+    _PHASE.update(stage_s=0.0, program_s=0.0, eval_s=0.0, train_s=0.0)
+
+
+def add_phase_time(phase: str, seconds: float) -> None:
+    """Fold externally-timed work (e.g. the sweep driver's host data
+    prep) into a phase accumulator."""
+    _PHASE[phase] = _PHASE.get(phase, 0.0) + float(seconds)
+
+
+def _stage_bucket_operands(processed_list, act_list, y_tr, tau, bucket,
+                           staging, max_points, mesh, faults, x_dev,
+                           x_tr):
+    """Build the staged device operands of one bucket run (everything
+    after W0/wg0 and x_tr in the program signature, fault views
+    included) plus the host metadata needed to slice histories back
+    out. This is the unit the warm re-staging cache memoizes."""
+    S = len(processed_list)
+    mp = list(max_points) if max_points is not None else None
+    item_bytes = int(np.prod(x_tr.shape[1:], dtype=np.int64)) * 4
+
+    if staging == "ragged":
+        batch = pl.stage_scenario_ragged(
+            processed_list, y_tr, act_list, tau, max_points=mp,
+            bucket=bucket)
+        _, T_b, n_b, R_b, C = batch.dims
+        n_pad = n_b                       # ragged is mesh=None only
+        n_win = T_b // tau
+        prestage = T_b * R_b * C * item_bytes <= PRESTAGE_LIMIT_BYTES
+    else:
+        batch = pl.stage_scenario_batch(
+            processed_list, y_tr, act_list, tau, max_points=mp,
+            bucket=bucket)
+        _, T_b, n_b, P_b = batch.dims
+        n_pad = n_b
+        if mesh is not None:
+            ndev = int(np.prod(mesh.devices.shape))
+            n_pad = -(-n_b // ndev) * ndev
+        n_win = T_b // tau
+        prestage = (S * T_b * n_pad * P_b * item_bytes
+                    <= PRESTAGE_LIMIT_BYTES)
+
+    def stage(a):
+        """(S, T_b, n_b, ...) -> (windows, tau, S, n_pad, ...): scan
+        axes lead (outer windows, inner rounds), scenarios inside."""
+        a = _pad_axis(np.asarray(a), n_pad, 2)
+        a = np.moveaxis(a, 0, 1)                  # (T_b, S, n_pad, ...)
+        return np.ascontiguousarray(
+            a.reshape(n_win, tau, *a.shape[1:]))
+
+    if staging == "ragged":
+        # row tables have no scenario axis — just fold rounds into
+        # (windows, tau) scan axes
+        def stage_rows(a):
+            a = np.asarray(a)
+            return np.ascontiguousarray(
+                a.reshape(n_win, tau, *a.shape[1:]))
+
+        idx = stage_rows(batch.idx)
+        yb, wts = stage_rows(batch.yb), stage_rows(batch.w)
+        cell = jnp.asarray(stage_rows(batch.cell))
+    else:
+        idx = stage(batch.idx)
+        yb, wts = stage(batch.yb), stage(batch.w)
+        cell = None
+    counts, act = stage(batch.counts), stage(batch.act)
+    # aggregations land on window-last rounds by construction
+    agg_w = np.ascontiguousarray(np.asarray(
+        batch.is_agg, np.float32).reshape(S, n_win, tau)[..., -1].T)
+
+    fault_ops = ()
+    if faults is not None:
+        # identity-initialized window-last fault views (phantom windows
+        # and devices stay at the 1.0 no-fault value), filled from each
+        # scenario's schedule, staged as (windows, S, n_pad)
+        upl_w = np.ones((S, n_win, n_pad), np.float32)
+        cor_w = np.ones((S, n_win, n_pad), np.float32)
+        for b, f in enumerate(faults):
+            if f is None:
+                continue
+            upl_v, cor_v = f.engine_arrays()        # (T_s, n_s)
+            sl = slice(tau - 1, f.T, tau)
+            upl_w[b, :f.T // tau, :f.n] = upl_v[sl]
+            cor_w[b, :f.T // tau, :f.n] = cor_v[sl]
+        fault_ops = (jnp.asarray(np.ascontiguousarray(
+            np.moveaxis(upl_w, 0, 1))), jnp.asarray(
+            np.ascontiguousarray(np.moveaxis(cor_w, 0, 1))))
+
+    idx_dev = jnp.asarray(idx)
+    if prestage:
+        xb_all, idx_arg = jnp.take(x_dev, idx_dev, axis=0), None
+    else:
+        xb_all, idx_arg = None, idx_dev
+
+    staged_args = (xb_all, idx_arg, jnp.asarray(yb), jnp.asarray(wts),
+                   cell, jnp.asarray(counts), jnp.asarray(act),
+                   jnp.asarray(agg_w)) + fault_ops
+    meta = {"T": list(batch.T), "n": list(batch.n),
+            "is_agg": np.asarray(batch.is_agg), "T_b": T_b,
+            "n_win": n_win, "n_pad": n_pad, "prestage": prestage}
+    return staged_args, meta
+
+
 def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
                        processed_list, act_list, tau: int, eta: float,
                        max_points=None, *, bucket: str = "pow2",
-                       mesh="auto", faults=None, guard: bool = True,
+                       mesh="auto", staging: str = "dense", faults=None,
+                       guard: bool = True,
                        quorum: float = 0.0) -> list[dict]:
     """Train a whole bucket of scenarios in ONE compiled program.
 
@@ -968,6 +1249,16 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
     (T, n) and — on CPU — bitwise-identical to running that scenario
     alone through ``run_rounds_scan``.
 
+    ``staging`` — ``"dense"`` (default) stages the classic padded
+    (S, T_b, n_b, P_b) slabs; ``"ragged"`` stages the chunk-row tables
+    of ``pipeline.stage_scenario_ragged`` so the compiled per-round
+    work tracks the bucket's actual sample total (mesh must be None;
+    bitwise guarantee: equal to the same scenario run ALONE under
+    ragged staging, allclose to the dense/scan paths). Staged device
+    operands are memoized across calls in a fingerprint-keyed LRU
+    (``staged_cache_stats``), so warm repeat sweeps skip the host
+    staging and re-upload entirely.
+
     ``faults`` — optional list of per-scenario
     :class:`repro.core.faults.FaultSchedule` (entries may be None):
     crash outages are ANDed into each scenario's activity and the
@@ -975,6 +1266,10 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
     the shared ``guard``/``quorum`` config applied across the bucket
     (see ``run_rounds_scan`` for the semantics).
     """
+    t_stage0 = time.perf_counter()
+    if staging not in ("dense", "ragged"):
+        raise ValueError(f"staging must be 'dense' or 'ragged'; "
+                         f"got {staging!r}")
     S = len(processed_list)
     use_faults = faults is not None and any(f is not None for f in faults)
     if use_faults:
@@ -992,69 +1287,44 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
     guard_f = bool(guard) if use_faults else False
     quorum_f = float(quorum) if use_faults else 0.0
 
-    batch = pl.stage_scenario_batch(
-        processed_list, y_tr, act_list, tau,
-        max_points=list(max_points) if max_points is not None else None,
-        bucket=bucket)
-    _, T_b, n_b, P_b = batch.dims
-    n_win = T_b // tau
-
     if mesh == "auto":
         mesh = None
         if jax.device_count() > 1:
             from repro.launch.mesh import data_mesh_for
 
-            mesh = data_mesh_for(n_b)
-    n_pad = n_b
-    if mesh is not None:
-        ndev = int(np.prod(mesh.devices.shape))
-        n_pad = -(-n_b // ndev) * ndev
+            n_max = max(
+                p.n if isinstance(p, pl.FlatStreams) else len(p[0])
+                for p in processed_list)
+            mesh = data_mesh_for(pl.bucket_size(
+                n_max, bucket, max_inflation=pl.BUCKET_MAX_INFLATION))
+    if staging == "ragged" and mesh is not None:
+        raise ValueError("ragged staging is single-program only; "
+                         "pass mesh=None (or staging='dense')")
 
-    def stage(a):
-        """(S, T_b, n_b, ...) -> (windows, tau, S, n_pad, ...): scan
-        axes lead (outer windows, inner rounds), scenarios inside."""
-        a = _pad_axis(np.asarray(a), n_pad, 2)
-        a = np.moveaxis(a, 0, 1)                  # (T_b, S, n_pad, ...)
-        return np.ascontiguousarray(
-            a.reshape(n_win, tau, *a.shape[1:]))
-
-    idx = stage(batch.idx)
-    yb, wts, counts = stage(batch.yb), stage(batch.w), stage(batch.counts)
-    act = stage(batch.act)
-    # aggregations land on window-last rounds by construction
-    agg_w = np.ascontiguousarray(np.asarray(
-        batch.is_agg, np.float32).reshape(S, n_win, tau)[..., -1].T)
-
-    fault_ops = ()
-    if use_faults:
-        # identity-initialized window-last fault views (phantom windows
-        # and devices stay at the 1.0 no-fault value), filled from each
-        # scenario's schedule, staged as (windows, S, n_pad)
-        upl_w = np.ones((S, n_win, n_pad), np.float32)
-        cor_w = np.ones((S, n_win, n_pad), np.float32)
-        for b, f in enumerate(faults):
-            if f is None:
-                continue
-            upl_v, cor_v = f.engine_arrays()        # (T_s, n_s)
-            sl = slice(tau - 1, f.T, tau)
-            upl_w[b, :f.T // tau, :f.n] = upl_v[sl]
-            cor_w[b, :f.T // tau, :f.n] = cor_v[sl]
-        fault_ops = (jnp.asarray(np.ascontiguousarray(
-            np.moveaxis(upl_w, 0, 1))), jnp.asarray(
-            np.ascontiguousarray(np.moveaxis(cor_w, 0, 1))))
-
+    mesh_shape = None if mesh is None else tuple(mesh.devices.shape)
     x_dev = _to_device_cached(x_tr)
-    idx_dev = jnp.asarray(idx)
-    item_bytes = int(np.prod(x_tr.shape[1:], dtype=np.int64)) * 4
-    prestage = (S * T_b * n_pad * P_b * item_bytes
-                <= PRESTAGE_LIMIT_BYTES)
-    if prestage:
-        xb_all, idx_arg = jnp.take(x_dev, idx_dev, axis=0), None
+    cache_key = _staged_fingerprint(
+        processed_list, act_list, tau, bucket, staging, max_points,
+        mesh_shape, faults if use_faults else None, x_tr, y_tr)
+    hit = _STAGED_CACHE.get(cache_key)
+    if hit is not None:
+        _STAGED_CACHE.move_to_end(cache_key)
+        _STAGED_CACHE_STATS["hits"] += 1
+        staged_args, meta, _ = hit
     else:
-        xb_all, idx_arg = None, idx_dev
+        _STAGED_CACHE_STATS["misses"] += 1
+        staged_args, meta = _stage_bucket_operands(
+            processed_list, act_list, y_tr, tau, bucket, staging,
+            max_points, mesh, faults if use_faults else None, x_dev,
+            x_tr)
+        _staged_cache_put(cache_key, staged_args, meta)
+    n_pad = meta["n_pad"]
+    T_b, n_win = meta["T_b"], meta["n_win"]
 
     # parameter stacks staged host-side: one device put per leaf
-    # instead of per-(bucket shape) broadcast/stack mini-programs
+    # instead of per-(bucket shape) broadcast/stack mini-programs.
+    # W0 is the donated operand, so it is built fresh every call and
+    # never cached.
     tree_map = jax.tree_util.tree_map
     W0 = tree_map(
         lambda *ps: jnp.asarray(np.stack([np.broadcast_to(
@@ -1064,12 +1334,14 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
         lambda *ps: jnp.asarray(np.stack([np.asarray(p) for p in ps])),
         *params_list)
 
-    fn = _bucket_program(apply_fn, float(eta), prestage, mesh,
-                         use_faults, guard_f, quorum_f)
-    res = fn(
-        W0, wg0, x_dev, xb_all, idx_arg, jnp.asarray(yb),
-        jnp.asarray(wts), jnp.asarray(counts), jnp.asarray(act),
-        jnp.asarray(agg_w), *fault_ops)
+    t_train0 = time.perf_counter()
+    _PHASE["stage_s"] += t_train0 - t_stage0
+    fn = _bucket_program(apply_fn, float(eta), meta["prestage"], mesh,
+                         use_faults, guard_f, quorum_f, staging)
+    res = fn(W0, wg0, x_dev, *staged_args)
+    jax.block_until_ready(res)
+    t_eval0 = time.perf_counter()
+    _PHASE["program_s"] += t_eval0 - t_train0
     losses, H_w, wg_win = res[:3]
     if use_faults:
         surv_win, expd_win, qok_win = (np.asarray(r) for r in res[3:])
@@ -1080,13 +1352,14 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
     ev = AsyncEvaluator(apply_fn, x_te, y_te)
     ev.submit_stack(wg_win, n_axes=2)
     (tl,), (ta,) = ev.collect()
+    _PHASE["eval_s"] += time.perf_counter() - t_eval0
 
     losses = np.asarray(losses).reshape(T_b, S, n_pad)
     H_w = np.asarray(H_w)
     hists = []
     for b in range(S):
-        T, n = batch.T[b], batch.n[b]
-        agg_rounds = np.nonzero(batch.is_agg[b, :T])[0]
+        T, n = meta["T"][b], meta["n"][b]
+        agg_rounds = np.nonzero(meta["is_agg"][b, :T])[0]
         wins = agg_rounds // tau
         h = {
             "device_loss": list(losses[:T, b, :n]),
@@ -1098,12 +1371,14 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
             h["agg_survivors"] = [float(v) for v in surv_win[wins, b]]
             h["agg_quorum_ok"] = [bool(v > 0) for v in qok_win[wins, b]]
         hists.append(h)
+    _PHASE["train_s"] += time.perf_counter() - t_train0
     return hists
 
 
 def run_rounds_batched_single(apply_fn, params, x_tr, y_tr, x_te, y_te,
                               processed, act_all, tau: int, eta: float,
-                              max_pts: int, *, mesh="auto", faults=None,
+                              max_pts: int, *, mesh="auto",
+                              staging: str = "dense", faults=None,
                               guard: bool = True,
                               quorum: float = 0.0) -> dict:
     """Single-scenario entry to the batched path (``engine="batched"``
@@ -1111,6 +1386,7 @@ def run_rounds_batched_single(apply_fn, params, x_tr, y_tr, x_te, y_te,
     return run_rounds_batched(
         apply_fn, [params], x_tr, y_tr, x_te, y_te, [processed],
         [act_all], tau, eta, [max_pts], bucket="exact", mesh=mesh,
+        staging=staging,
         faults=None if faults is None else [faults], guard=guard,
         quorum=quorum)[0]
 

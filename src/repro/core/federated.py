@@ -63,8 +63,14 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                       checkpoint_path: str | None = None,
                       checkpoint_every: int = 1,
                       resume: str | None = None,
-                      stop_after: int | None = None) -> dict:
+                      stop_after: int | None = None,
+                      prepared: tuple | None = None) -> dict:
     """Train with a given movement plan. Returns history dict.
+
+    ``prepared`` — optional precomputed ``_prepare_streams`` result
+    (streams, processed, act_all, max_pts) for THIS scenario: skips
+    the host data-plane prep, so a sweep driver that already staged
+    the point (e.g. to price it for dispatch) doesn't pay it twice.
 
     ``schedule`` — optional :class:`NetworkSchedule`: the per-round
     active mask every engine stages (and the churn masking inside the
@@ -104,8 +110,11 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     ``core.engine.run_rounds_scan``); other engines reject them.
     """
     x_tr, y_tr, x_te, y_te = data
-    streams, processed, act_all, max_pts = _prepare_streams(
-        cfg, data, plan, streams, activity, schedule, faults)
+    if prepared is not None:
+        streams, processed, act_all, max_pts = prepared
+    else:
+        streams, processed, act_all, max_pts = _prepare_streams(
+            cfg, data, plan, streams, activity, schedule, faults)
 
     key = jax.random.PRNGKey(cfg.seed)
     w_global, apply_fn = make_model(cfg.model, key)
@@ -240,6 +249,8 @@ def run_network_aware_batched(cfgs: list[FedConfig], data,
                               activities: list | None = None,
                               schedules: list | None = None,
                               mesh="auto", bucket: str = "pow2",
+                              staging: str = "dense",
+                              prepared: list | None = None,
                               faults: list | None = None,
                               guard: bool = True,
                               quorum: float = 0.0) -> list[dict]:
@@ -259,6 +270,17 @@ def run_network_aware_batched(cfgs: list[FedConfig], data,
     ``mesh="auto"`` shards the fog-device axis across all visible
     devices on multi-device hosts; ``mesh=None`` forces the
     single-device program; an explicit mesh is used as-is.
+
+    ``staging`` — "dense" pads every point to the bucket's (n_b, P_b)
+    slab; "ragged" stages chunk-row tables so compiled work tracks the
+    actual sample total (single-program only — the cost-model dispatch
+    in ``benchmarks.fog.run_scenarios`` picks between them per bucket).
+
+    ``prepared`` — optional pre-computed ``_prepare_streams`` results
+    (one ``(streams, processed, act_all, max_pts)`` tuple per
+    scenario): the cost-model dispatch runs the host prep once to price
+    the bucket and hands it down here, so dispatching never pays prep
+    twice.
 
     Returns one history dict per scenario, same contract as
     ``run_network_aware``.
@@ -282,11 +304,14 @@ def run_network_aware_batched(cfgs: list[FedConfig], data,
     processed_list, act_list, max_list, hists = [], [], [], []
     for b, cfg in enumerate(cfgs):
         f = faults[b] if faults is not None else None
-        st, processed, act_all, max_pts = _prepare_streams(
-            cfg, data, plans[b],
-            streams[b] if streams is not None else None,
-            activities[b] if activities is not None else None,
-            schedules[b] if schedules is not None else None, f)
+        if prepared is not None:
+            st, processed, act_all, max_pts = prepared[b]
+        else:
+            st, processed, act_all, max_pts = _prepare_streams(
+                cfg, data, plans[b],
+                streams[b] if streams is not None else None,
+                activities[b] if activities is not None else None,
+                schedules[b] if schedules is not None else None, f)
         processed_list.append(processed)
         act_list.append(act_all)
         max_list.append(max_pts)
@@ -302,7 +327,8 @@ def run_network_aware_batched(cfgs: list[FedConfig], data,
     outs = eng.run_rounds_batched(
         apply_fn, params_list, x_tr, y_tr, x_te, y_te, processed_list,
         act_list, cfgs[0].tau, cfgs[0].eta, max_list, bucket=bucket,
-        mesh=mesh, faults=faults, guard=guard, quorum=quorum)
+        mesh=mesh, staging=staging, faults=faults, guard=guard,
+        quorum=quorum)
     for hist, out in zip(hists, outs):
         hist.update(out)
     return hists

@@ -495,6 +495,182 @@ class ScenarioBatch:
         return self.idx.shape
 
 
+# chunk size of the ragged row tables: each (round, device) cell is cut
+# into ceil(count/RAGGED_CHUNK) virtual rows of RAGGED_CHUNK sample
+# slots, so the compiled per-round work is proportional to the actual
+# sample total (plus at most one partially-filled chunk per nonempty
+# cell) instead of S·P_max. Larger chunks mean fewer rows (less
+# parameter gather/scatter traffic) but more slot padding per cell.
+RAGGED_CHUNK = 8
+
+
+@dataclasses.dataclass
+class RaggedScenarioBatch:
+    """S scenarios staged as per-round RAGGED chunk-row tables.
+
+    Instead of the dense (S, T_b, n_b, P_b) slab of
+    :class:`ScenarioBatch` — whose phantom P-slots still execute — each
+    round carries a flat table of ``R_b`` chunk rows of ``chunk``
+    sample slots: row r of round t holds up to ``chunk`` samples of ONE
+    (scenario, device) cell, identified by ``cell[t, r]`` on the flat
+    scenario-major device axis (``s * n_b + dev``). Phantom rows point
+    at the trash segment ``S * n_b`` so their (zero-weight) garbage
+    never reaches a real device. A scenario's rows are contiguous and
+    ordered by (device, chunk) within each round, so its per-device
+    reduction order — and therefore its bits — is the same whether it
+    trains alone or inside the bucket.
+
+    ``counts``/``act``/``is_agg`` and the true-dims lists are exactly
+    the dense batch's: the device axis stays (S, n_b), only the sample
+    axis goes ragged."""
+
+    idx: np.ndarray      # (T_b, R_b, C) int32 global sample ids
+    yb: np.ndarray       # (T_b, R_b, C) int32 labels
+    w: np.ndarray        # (T_b, R_b, C) float32 slot mask
+    cell: np.ndarray     # (T_b, R_b) int32 flat device id; S*n_b=trash
+    counts: np.ndarray   # (S, T_b, n_b) float32
+    act: np.ndarray      # (S, T_b, n_b) float32
+    is_agg: np.ndarray   # (S, T_b) bool
+    T: list[int]
+    n: list[int]
+    P: list[int]
+    tau: int
+    chunk: int
+    total_samples: int   # true sample total across the bucket
+    total_rows: int      # true (unpadded) chunk-row total
+
+    @property
+    def dims(self) -> tuple[int, int, int, int, int]:
+        """(S, T_b, n_b, R_b, C) — the bucket the program compiles
+        for."""
+        S, T_b, n_b = self.counts.shape
+        R_b, C = self.idx.shape[1:]
+        return S, T_b, n_b, R_b, C
+
+
+def _cell_table(processed, y=None):
+    """Normalize per-cell lists or a :class:`FlatStreams` into
+    ((T, n) sample counts, concatenated ids in (t, dev, within-cell)
+    order) — the inputs the ragged stager scatters from."""
+    if isinstance(processed, FlatStreams):
+        T, n = processed.T, processed.n
+        lens = np.bincount(processed.cell_key(),
+                           minlength=T * n).astype(np.int64).reshape(T, n)
+        return lens, np.asarray(processed.idx, np.int64)
+    lens = np.array([[len(ix) for ix in row] for row in processed],
+                    np.int64).reshape(len(processed), -1)
+    cells = [np.asarray(ix, np.int64) for row in processed for ix in row]
+    ids = (np.concatenate(cells) if cells and lens.sum()
+           else np.empty(0, np.int64))
+    return lens, ids
+
+
+def stage_scenario_ragged(processed_list, y: np.ndarray,
+                          act_list: list[np.ndarray], tau: int, *,
+                          max_points: list[int] | None = None,
+                          bucket: str = "pow2",
+                          chunk: int | None = None
+                          ) -> RaggedScenarioBatch:
+    """Ragged counterpart of :func:`stage_scenario_batch`.
+
+    Per-round chunk-row tables are built with one scatter per staged
+    array (the :func:`stage_rounds_flat` idiom): every (scenario,
+    round, device) cell becomes ceil(count/chunk) rows, rows of one
+    round packed scenario-major (scenario rows contiguous, devices in
+    index order — the order the in-bucket-equals-alone bitwise
+    guarantee rests on), the row axis bucketed like the other compute
+    axes (pow2, ``BUCKET_MAX_INFLATION`` cap). The inflation warning
+    fires on the RAGGED totals — padded row-slots vs the samples
+    actually staged — not on the dense pow2 P prediction, since the
+    phantom P-slots the dense warning prices never execute here."""
+    C = int(chunk or RAGGED_CHUNK)
+    if C < 1:
+        raise ValueError(f"chunk must be >= 1; got {C}")
+    S = len(processed_list)
+    tables = [_cell_table(p) for p in processed_list]
+    T_s = [lens.shape[0] for lens, _ in tables]
+    n_s = [lens.shape[1] for lens, _ in tables]
+    P_s = [pad_size(p, (max_points or [0] * S)[b])
+           for b, p in enumerate(processed_list)]
+    T_b = max(bucket_rounds(T, tau, bucket) for T in T_s)
+    n_b = max(bucket_size(n, bucket,
+                          max_inflation=BUCKET_MAX_INFLATION)
+              for n in n_s)
+    nrows = [-(-lens // C) for lens, _ in tables]        # (T_s, n_s)
+    rows_round = np.zeros(T_b, np.int64)
+    for b, nr in enumerate(nrows):
+        rows_round[:T_s[b]] += nr.sum(1)
+    R_max = int(rows_round.max()) if T_b else 0
+    R_b = bucket_size(max(R_max, 1), bucket,
+                      max_inflation=BUCKET_MAX_INFLATION)
+    total_rows = int(rows_round.sum())
+    total_samples = int(sum(int(lens.sum()) for lens, _ in tables))
+    # satellite of the dense P-inflation warning, computed on what
+    # ragged staging actually executes: padded row-slots per horizon
+    if total_rows and T_b * R_b > 2 * total_rows:
+        _warn_once(
+            ("ragged_inflation", T_b, R_b),
+            f"ragged bucket pads {total_rows} chunk rows up to "
+            f"{T_b}x{R_b} row slots (> 2x) for this sweep; split the "
+            "sweep into finer buckets if the padded compute shows up")
+
+    trash = S * n_b
+    idx = np.zeros((T_b, R_b, C), np.int32)
+    yb = np.zeros((T_b, R_b, C), np.int32)
+    w = np.zeros((T_b, R_b, C), np.float32)
+    cell = np.full((T_b, R_b), trash, np.int32)
+    counts = np.zeros((S, T_b, n_b), np.float32)
+    act = np.zeros((S, T_b, n_b), np.float32)
+    is_agg = np.zeros((S, T_b), bool)
+    off = np.zeros(T_b, np.int64)        # next free row per round
+    for b, (lens, ids) in enumerate(tables):
+        T, n = T_s[b], n_s[b]
+        counts[b, :T, :n] = lens
+        act[b, :T, :n] = np.asarray(act_list[b], np.float32)
+        is_agg[b, :T] = (np.arange(T) + 1) % tau == 0
+        if ids.size:
+            nr_flat = nrows[b].reshape(-1)
+            lens_flat = lens.reshape(-1)
+            cell_of = np.repeat(np.arange(T * n, dtype=np.int64),
+                                lens_flat)
+            starts = np.concatenate([[0], np.cumsum(lens_flat)])[:-1]
+            pos = np.arange(ids.size, dtype=np.int64) - starts[cell_of]
+            # scenario-local row index of each cell within its round
+            rowbase = np.cumsum(nr_flat) - nr_flat
+            round_start = np.concatenate(
+                [[0], np.cumsum(nrows[b].sum(1))])[:-1]
+            rowbase -= np.repeat(round_start, n)
+            t_of = cell_of // n
+            row = off[t_of] + rowbase[cell_of] + pos // C
+            slot = pos % C
+            flat = (t_of * np.int64(R_b) + row) * C + slot
+            idx.reshape(-1)[flat] = ids
+            yb.reshape(-1)[flat] = y[ids]
+            w.reshape(-1)[flat] = 1.0
+            cell.reshape(-1)[t_of * np.int64(R_b) + row] = \
+                b * n_b + (cell_of % n)
+        off[:T] += nrows[b].sum(1)
+    return RaggedScenarioBatch(
+        idx=idx, yb=yb, w=w, cell=cell, counts=counts, act=act,
+        is_agg=is_agg, T=T_s, n=n_s, P=P_s, tau=tau, chunk=C,
+        total_samples=total_samples, total_rows=total_rows)
+
+
+def ragged_rows(processed_list, chunk: int | None = None) -> np.ndarray:
+    """Per-round chunk-row totals a ragged bucket of these scenarios
+    would stage — the cost model's work estimate, computed without
+    building the tables (rows = Σ over cells of ceil(count/chunk))."""
+    C = int(chunk or RAGGED_CHUNK)
+    T_max = max(
+        (p.T if isinstance(p, FlatStreams) else len(p))
+        for p in processed_list)
+    rows = np.zeros(T_max, np.int64)
+    for p in processed_list:
+        lens, _ = _cell_table(p)
+        rows[:lens.shape[0]] += (-(-lens // C)).sum(1)
+    return rows
+
+
 def stage_scenario_batch(processed_list: list[list[list[np.ndarray]]],
                          y: np.ndarray,
                          act_list: list[np.ndarray], tau: int, *,

@@ -158,6 +158,35 @@ def segment_sum(data, segment_ids, *, num_segments, use_pallas=None):
                                segment_ids, num_segments=num_segments)
 
 
+def segment_sum_rows(data, segment_ids, *, num_segments,
+                     use_pallas=None):
+    """out[s] = Σ data[segment_ids == s] over (E, ...) ROW data — the
+    ND-payload sibling of :func:`segment_sum` for reducing per-row
+    gradient/loss contributions onto their owning segment (the ragged
+    scenario-bucket engine reduces chunk-row gradients onto the flat
+    (S·n) device axis this way). Left unjitted so it inlines into the
+    caller's trace. CPU path is the jnp scatter-add, which applies
+    updates in row-index order — per-segment accumulation order is the
+    row order, independent of how many rows other segments own (the
+    property the ragged engine's in-bucket-equals-alone bitwise
+    guarantee rests on). The Pallas one-hot-matmul kernel covers the
+    flat (E,) case only; ND payloads flatten through it column-wise
+    when it is forced on."""
+    data = jnp.asarray(data, jnp.float32)
+    if use_pallas is None:
+        use_pallas = False          # scatter path is the bitwise oracle
+    if use_pallas and data.ndim > 1:
+        cols = data.reshape(data.shape[0], -1)
+        out = jnp.stack([
+            segment_sum_pallas(cols[:, j], segment_ids, num_segments)
+            for j in range(cols.shape[1])], axis=1)
+        return out.reshape((num_segments,) + data.shape[1:])
+    if use_pallas:
+        return segment_sum_pallas(data, segment_ids, num_segments)
+    return jax.ops.segment_sum(data, segment_ids,
+                               num_segments=num_segments)
+
+
 @partial(jax.jit, static_argnames=("num_segments", "use_pallas"))
 def segment_max(data, segment_ids, *, num_segments, use_pallas=None):
     """out[s] = max data[segment_ids == s] (−inf for empty segments)."""

@@ -1,0 +1,176 @@
+"""Bucket dispatch cost model (core.costmodel): candidate pricing,
+S=1 / forced short-circuits, the compiled-program registry that flips
+cold buckets batched and warm buckets loop-ward, ragged-vs-dense
+staging choice under padding inflation, and the online EMA
+calibration (slot costs from clean runs, compile cost from the jax
+monitoring listener)."""
+import pytest
+
+from repro.core import costmodel as cm
+
+
+def _dims(S=3, T=12, n=6, P=32, T_b=None, n_b=None, P_b=None,
+          R_b=16, chunk=8, **kw):
+    return dict(points=[(T, n, P)] * S, T_b=T_b or T, n_b=n_b or n,
+                P_b=P_b or P, R_b=R_b, chunk=chunk, **kw)
+
+
+def _model(**kw):
+    return cm.CostModel(**kw)
+
+
+# ---------------------------------------------------------------------------
+# choice
+# ---------------------------------------------------------------------------
+
+
+def test_single_point_short_circuits_to_loop():
+    d = _model().choose(key="k", **_dims(S=1))
+    assert d.path == "loop" and d.staging is None
+    assert d.reason == "S=1"
+
+
+def test_cold_bucket_prefers_batched_warm_flips_to_loop():
+    m = _model()
+    # idents make the 4 same-shape points distinct loop programs (the
+    # sweep's prep-free identity includes the stream seed)
+    dims = _dims(S=4, R_b=64, idents=list(range(4)))
+    cold = m.choose(key="k", **dims)
+    # cold: 4 loop compiles vs 1 batched compile dominates
+    assert cold.path == "batched"
+    assert cold.new_programs["loop"] == 4
+    m.record(cold, key="k", **dims)
+    m.mark_loop_seen("k", list(range(4)))
+    warm = m.choose(key="k", **dims)
+    # warm, modest padding: the loop's exact slots win
+    assert warm.new_programs["loop"] == 0
+    assert warm.new_programs["batched-" + cold.staging] == 0
+    assert warm.path == "loop" and warm.reason == "cost-model"
+
+
+def test_ragged_wins_at_high_padding_inflation():
+    # skewed cells: dense AND the loop pad every (device, round) slab
+    # to P=512 while the ragged rows track the true sample totals
+    # (~16x inflation removed), so ragged wins despite its ~8x dearer
+    # memory-bound slots
+    m = _model()
+    points = [(16, 8, 512)] * 4
+    dims = dict(points=points, T_b=16, n_b=8, P_b=512, R_b=128,
+                chunk=8)
+    m.mark_loop_seen("k", points)                       # all warm
+    m._seen.add(m._batched_desc("k", "dense", 4, (16, 8, 512)))
+    m._seen.add(m._batched_desc("k", "ragged", 4, (16, 128, 8)))
+    d = m.choose(key="k", **dims)
+    assert d.new_programs == {"loop": 0, "batched-dense": 0,
+                              "batched-ragged": 0}
+    assert d.predicted_s["batched-ragged"] < d.predicted_s["loop"] \
+        < d.predicted_s["batched-dense"]
+    assert (d.path, d.staging) == ("batched", "ragged")
+
+
+def test_forced_batched_and_staging_pin():
+    m = _model()
+    d = m.choose(key="k", force_path="batched", **_dims())
+    assert d.path == "batched" and d.reason == "forced"
+    d = m.choose(key="k", force_path="batched", staging="dense",
+                 **_dims())
+    assert d.staging == "dense"
+    d = m.choose(key="k", force_path="batched", staging="ragged",
+                 **_dims())
+    assert d.staging == "ragged"
+
+
+def test_staging_pin_without_force_still_considers_loop():
+    m = _model()
+    dims = _dims(S=2)
+    m.record(m.choose(key="k", force_path="batched", staging="dense",
+                      **dims), key="k", **dims)
+    m.mark_loop_seen("k", [(T, n, P) for T, n, P in dims["points"]])
+    d = m.choose(key="k", staging="dense", **dims)
+    assert d.path == "loop"        # warm loop beats warm dense padding
+
+
+def test_idents_replace_shape_descriptors():
+    m = _model()
+    dims = _dims(S=2, idents=["a", "b"])
+    assert m.choose(key="k", **dims).new_programs["loop"] == 2
+    m.mark_loop_seen("k", ["a"])
+    assert m.choose(key="k", **dims).new_programs["loop"] == 1
+    m.mark_loop_seen("k", ["b"])
+    assert m.choose(key="k", **dims).new_programs["loop"] == 0
+    # a different bucket key is a different program
+    assert m.choose(key="k2", **dims).new_programs["loop"] == 2
+
+
+def test_eval_slots_shift_all_candidates_equally():
+    m = _model()
+    base = m.choose(key="k", **_dims())
+    shifted = m.choose(key="k", **_dims(eval_slots=1_000_000))
+    delta = 1_000_000 * m.eval_slot_s
+    for cand, p in base.predicted_s.items():
+        assert shifted.predicted_s[cand] == pytest.approx(p + delta)
+    assert shifted.path == base.path
+
+
+def test_as_row_is_json_shaped():
+    row = _model().choose(key="k", **_dims()).as_row()
+    assert set(row) == {"path", "staging", "reason", "predicted_s",
+                        "new_programs"}
+    assert all(isinstance(v, float)
+               for v in row["predicted_s"].values())
+
+
+# ---------------------------------------------------------------------------
+# online calibration
+# ---------------------------------------------------------------------------
+
+
+def test_observe_run_refines_slot_emas_separately():
+    m = _model(per_bucket_s=0.0, per_point_s=0.0)
+    s0, r0 = m.slot_s, m.ragged_slot_s
+    m.observe_run("batched", "dense", 1000, 1000 * s0 * 2, 0)
+    assert m.slot_s == pytest.approx(s0 * (1 + cm.EMA_ALPHA))
+    assert m.ragged_slot_s == r0
+    m.observe_run("batched", "ragged", 1000, 1000 * r0 * 2, 0)
+    assert m.ragged_slot_s == pytest.approx(r0 * (1 + cm.EMA_ALPHA))
+
+
+def test_observe_run_subtracts_overhead_and_eval():
+    m = _model()
+    s0 = m.slot_s
+    # remainder after fixed overhead + eval is exactly slots*slot_s:
+    # the EMA must not move
+    secs = (1000 * s0 + 4 * m.per_point_s + 500 * m.eval_slot_s)
+    m.observe_run("loop", None, 1000, secs, 0, n_points=4,
+                  eval_slots=500)
+    assert m.slot_s == pytest.approx(s0)
+    # overhead-dominated run (remainder <= 0): teaches nothing
+    m.observe_run("loop", None, 1000, 0.5 * (4 * m.per_point_s), 0,
+                  n_points=4)
+    assert m.slot_s == pytest.approx(s0)
+
+
+def test_observe_run_skips_compiling_and_degenerate_runs():
+    m = _model()
+    s0 = m.slot_s
+    m.observe_run("loop", None, 1000, 99.0, 3)      # compiled: skip
+    m.observe_run("loop", None, 0, 99.0, 0)         # no slots: skip
+    m.observe_run("loop", None, 1000, 0.0, 0)       # no time: skip
+    assert m.slot_s == s0
+
+
+def test_observe_compile_ema_and_counter():
+    m = _model(compile_s=1.0)
+    m.observe_compile(3.0)
+    assert m.compile_events == 1
+    assert m.compile_s == pytest.approx(1.0 + cm.EMA_ALPHA * 2.0)
+    m.observe_compile(0.0)                           # counted, no EMA
+    assert m.compile_events == 2
+    assert m.compile_s == pytest.approx(1.0 + cm.EMA_ALPHA * 2.0)
+
+
+def test_install_listener_is_idempotent():
+    cm.install_listener()
+    installed = cm._LISTENER["installed"]
+    cm.install_listener()
+    assert cm._LISTENER["installed"] == installed

@@ -400,3 +400,162 @@ def test_batched_sharded_multi_device_equivalence():
         assert gaps["loss"] <= 1e-3, (tag, gaps)
         assert gaps["H"] <= 1e-4, (tag, gaps)
         assert gaps["dl"] <= 1e-3, (tag, gaps)
+
+
+# ---------------------------------------------------------------------------
+# ragged staging: in-bucket == alone bitwise, scan equivalence, warning
+# ---------------------------------------------------------------------------
+
+
+def _batched_ragged(setups, data, **kw):
+    return _batched(setups, data, mesh=None, staging="ragged", **kw)
+
+
+def test_ragged_mixed_bucket_matches_alone_bitwise():
+    """The ragged bitwise contract: a scenario's per-round rows are
+    contiguous and (device, chunk)-ordered, so its per-device reduction
+    order — and its bits — are identical whether it shares the bucket
+    with other scenarios (phantom rounds/devices, churn) or runs as a
+    ragged bucket of one."""
+    specs = [dict(n=4, T=12, tau=4, seed=0),
+             dict(n=6, T=12, tau=4, seed=1),
+             dict(n=6, T=8, tau=4, seed=3, p_exit=0.2, p_entry=0.15)]
+    setups = [_setup(**s) for s in specs]
+    together = _batched_ragged(setups, setups[0][1])
+    for s, h_grp in zip(setups, together):
+        h_alone = _batched_ragged([s], setups[0][1])[0]
+        _assert_bitwise(h_alone, h_grp)
+
+
+def test_ragged_matches_scan_histories():
+    """Ragged staging reduces each device's samples in stream order
+    (chunk-major), so the shape-insensitive history — aggregation
+    schedule, H weights, accuracy/loss curves — matches the per-point
+    scan exactly; per-device losses differ only by padded-reduction
+    association."""
+    setups = [_setup(n=4, T=12, tau=4, seed=0),
+              _setup(n=6, T=12, tau=4, seed=1)]
+    refs = [_scan(s) for s in setups]
+    outs = _batched_ragged(setups, setups[0][1])
+    for h_ref, h_bat in zip(refs, outs):
+        assert h_ref["agg_round"] == h_bat["agg_round"]
+        assert h_ref["test_acc"] == h_bat["test_acc"]
+        assert h_ref["test_loss"] == h_bat["test_loss"]
+        np.testing.assert_array_equal(np.stack(h_ref["H_agg"]),
+                                      np.stack(h_bat["H_agg"]))
+        np.testing.assert_allclose(np.stack(h_bat["device_loss"]),
+                                   np.stack(h_ref["device_loss"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ragged_with_faults_matches_alone_bitwise():
+    from repro.core import faults as fl
+
+    fs = fl.FaultSchedule(12, 6, 4, [
+        fl.FaultEvent(3, "corrupt", 0, float("nan")),
+        fl.FaultEvent(5, "crash", 2),
+        fl.FaultEvent(7, "drop", 3)])
+    setups = [_setup(n=6, T=12, tau=4, seed=0),
+              _setup(n=6, T=12, tau=4, seed=1)]
+    faults = [fs, None]
+    together = _batched_ragged(setups, setups[0][1], faults=faults,
+                               guard=True, quorum=0.3)
+    for s, f, h_grp in zip(setups, faults, together):
+        h_alone = _batched_ragged([s], setups[0][1],
+                                  faults=[f] if f is not None else None,
+                                  guard=True, quorum=0.3)[0]
+        _assert_bitwise(h_alone, h_grp)
+        if f is not None:       # clean points carry no fault history
+            assert h_alone["agg_survivors"] == h_grp["agg_survivors"]
+            assert h_alone["agg_quorum_ok"] == h_grp["agg_quorum_ok"]
+
+
+def test_ragged_inflation_warns_once_per_sweep():
+    """S2: the ragged warning prices what ragged staging actually
+    executes (padded row-slots vs staged chunk rows), and fires once
+    per sweep under the reset_padding_warnings contract."""
+    y = np.arange(64, dtype=np.int32)
+    n = 8
+    # round 0 fills every cell (8 rows); later rounds one cell each ->
+    # R_b buckets to 8 while only 11 of 32 row slots hold data
+    spike = [[np.arange(3) for _ in range(n)]] + \
+        [[np.arange(2)] + [np.empty(0, np.int64)] * (n - 1)
+         for _ in range(3)]
+    act = [np.ones((4, n))]
+    pl.reset_padding_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        pl.stage_scenario_ragged([spike], y, act, tau=2)
+        pl.stage_scenario_ragged([spike], y, act, tau=2)
+        assert len([w for w in rec
+                    if "ragged bucket pads" in str(w.message)]) == 1
+    pl.reset_padding_warnings()                 # new sweep: warns again
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        pl.stage_scenario_ragged([spike], y, act, tau=2)
+        assert [w for w in rec
+                if "ragged bucket pads" in str(w.message)]
+
+
+def test_staged_cache_hits_on_repeat_sweep():
+    """Warm re-staging: a repeat of the same bucket reuses the staged
+    device buffers (cache hit) and reproduces the histories bitwise."""
+    setups = [_setup(n=4, T=12, tau=4, seed=0),
+              _setup(n=6, T=12, tau=4, seed=1)]
+    eng.reset_staged_cache()
+    first = _batched(setups, setups[0][1], mesh=None)
+    stats = eng.staged_cache_stats()
+    assert stats["misses"] >= 1
+    second = _batched(setups, setups[0][1], mesh=None)
+    stats2 = eng.staged_cache_stats()
+    assert stats2["hits"] > stats["hits"]
+    for h1, h2 in zip(first, second):
+        _assert_bitwise(h1, h2)
+
+
+# ---------------------------------------------------------------------------
+# sweep layer: cost-model dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_run_scenarios_records_dispatch_decisions():
+    """The default engine="auto" sweep prices every bucket through the
+    cost model and stamps each row with the decision; single-point
+    buckets short-circuit to the loop path with reason "S=1"."""
+    from benchmarks.fog import make_scenario, run_scenarios
+
+    scale = _tiny_scale()
+    # 3 same-shape points (one S=3 bucket) + 1 odd size (an S=1 bucket)
+    scenarios = [make_scenario(scale, key={"i": i}, n=4,
+                               error_model="discard", seed=i)
+                 for i in range(3)]
+    scenarios.append(make_scenario(scale, key={"i": 3}, n=9,
+                                   error_model="discard", seed=0))
+    rows = run_scenarios(scenarios, scale, mesh=None)
+    assert all("dispatch" in r for r in rows)
+    for r in rows[:3]:
+        d = r["dispatch"]
+        assert d["path"] in ("loop", "batched")
+        assert d["reason"] == "cost-model"
+        assert set(d["predicted_s"]) == {"loop", "batched-dense",
+                                         "batched-ragged"}
+        assert r["engine"] == ("batched" if d["path"] == "batched"
+                               else r["engine"])
+    d1 = rows[3]["dispatch"]
+    assert d1["path"] == "loop" and d1["reason"] == "S=1"
+
+
+def test_run_scenarios_forced_batched_reports_forced_dispatch():
+    from benchmarks.fog import make_scenario, run_scenarios
+
+    scale = _tiny_scale()
+    scenarios = [make_scenario(scale, key={"i": i}, n=4,
+                               error_model="discard", seed=i)
+                 for i in range(2)]
+    rows = run_scenarios(scenarios, scale, engine="batched", mesh=None)
+    for r in rows:
+        assert r["engine"] == "batched"
+        assert r["dispatch"]["path"] == "batched"
+        assert r["dispatch"]["reason"] == "forced"
+        # forced batched keeps the historical dense-staging contract
+        assert r["dispatch"]["staging"] == "dense"
