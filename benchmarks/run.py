@@ -34,30 +34,18 @@ def bench(fn):
 # XLA compile counter (jax.monitoring backend_compile events): stamped
 # into every bench JSON so recompilation regressions — a sweep that
 # suddenly compiles per point instead of per bucket — show up in the
-# artifact trajectory across PRs.
-_COMPILES = {"n": 0, "installed": False, "last_emit": 0}
-
-
-def _install_compile_counter() -> None:
-    if _COMPILES["installed"]:
-        return
-    import jax
-
-    def _on_event(name, *a, **kw):
-        if name == "/jax/core/compile/backend_compile_duration":
-            _COMPILES["n"] += 1
-
-    try:
-        jax.monitoring.register_event_duration_secs_listener(_on_event)
-        _COMPILES["installed"] = True
-    except Exception:
-        pass
+# artifact trajectory across PRs. Reads the shared fan-out counter in
+# repro.core.monitoring (ONE process-wide registration, also feeding
+# the cost-model EMA and the sanitize recompile watchdog) instead of
+# registering a second global listener.
+_COMPILES = {"last_emit": 0}
 
 
 def compile_count() -> int:
-    """XLA compiles observed so far (0 until the counter installs)."""
-    _install_compile_counter()
-    return _COMPILES["n"]
+    """XLA compiles observed so far (0 if jax.monitoring is absent)."""
+    from repro.core import monitoring
+
+    return monitoring.compile_events()
 
 
 def _bench_meta() -> dict:
@@ -1442,7 +1430,7 @@ def main(argv=None) -> None:
                     "(scenario bench takes the min, for stable warm "
                     "timings); 0 = the scale's default")
     args = ap.parse_args(argv)
-    _install_compile_counter()
+    compile_count()   # install the shared compile listener before any jit
     scale = QUICK if args.quick else (FULL if args.full else DEFAULT)
     import dataclasses as _dc
     if args.max_n:

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Repo lint gate: fog-lint (repo-invariant static analysis) + waiver audit
+# + ruff (generic Python baseline, when available).
+#
+# Usage: bash scripts/lint.sh
+# Exits non-zero on any fog-lint finding, any waiver missing its
+# justification, or (when ruff is installed) any ruff error.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== fog-lint =="
+python -m repro.analysis src/repro --tests-dir tests
+
+echo "== fog-lint waiver audit =="
+python -m repro.analysis src/repro --tests-dir tests --list-waivers
+
+if command -v ruff >/dev/null 2>&1; then
+    echo "== ruff =="
+    ruff check .
+else
+    echo "== ruff: not installed, skipping (CI installs it) =="
+fi

@@ -1,0 +1,14 @@
+"""fog-lint: static analysis of this repo's hard-won invariants.
+
+    PYTHONPATH=src python -m repro.analysis                 # lint src/repro
+    PYTHONPATH=src python -m repro.analysis --list-waivers
+    scripts/lint.sh                                         # fog-lint + ruff
+
+Rules (see docs/lint.md for the catalog and the incidents behind it):
+dense-materialization, nan-unsafe-masking, recompile-hazard,
+host-sync-in-hot-path, rng-stream-discipline, oracle-pairing.
+"""
+from repro.analysis.core import (Finding, LintResult, ModuleInfo,  # noqa: F401
+                                 RepoContext, Rule, Waiver,
+                                 lint_paths, lint_sources)
+from repro.analysis.rules import all_rules, rules_by_name  # noqa: F401

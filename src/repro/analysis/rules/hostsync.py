@@ -1,0 +1,126 @@
+"""host-sync-in-hot-path: no device→host syncs inside compiled bodies.
+
+The engine's throughput story rests on ONE dispatch per horizon
+(``lax.scan`` over T rounds) and per bucket. A ``.item()``,
+``float()``, ``np.asarray`` or ``jax.device_get`` on a traced value
+inside a scan body either fails at trace time or — worse, in host
+callbacks and staged builders — silently serializes the pipeline per
+round. This rule derives the hot scopes statically:
+
+* any function passed by name as the body argument of ``lax.scan`` /
+  ``lax.fori_loop`` / ``lax.while_loop`` / ``lax.cond`` in the same
+  module, plus every ``def`` nested inside those bodies;
+* program builders by naming convention — functions matching
+  ``*_program`` / ``*_body`` (the ``_bucket_program`` /
+  ``_make_scan_body`` pattern) — whose nested ``def``s are the traced
+  round bodies.
+
+Reads of shape/dtype metadata (``int(np.prod(x.shape))``) are host
+math on static information and stay allowed; ``float()``/``int()``
+of literals likewise.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.core import (Finding, ModuleInfo, Rule, call_name,
+                                 mentions_shape)
+
+SCOPE = ("core/*", "distributed/*", "data/pipeline.py")
+LAX_TAILS = ("lax.scan", "lax.fori_loop", "lax.while_loop", "lax.cond",
+             "lax.switch")
+BUILDER_RE = re.compile(r"(_program|_body)$")
+SYNC_METHODS = ("item", "block_until_ready", "tolist")
+SYNC_CALLS = ("jax.device_get", "device_get")
+HOST_CASTS = ("float", "int", "bool")
+NP_PULLS = ("np.asarray", "np.array", "numpy.asarray", "numpy.array",
+            "onp.asarray", "onp.array")
+
+
+def _hot_functions(mod: ModuleInfo) -> dict:
+    """Map id(FunctionDef) -> reason for every hot scope."""
+    defs = [n for n in ast.walk(mod.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    by_name: dict = {}
+    for d in defs:
+        by_name.setdefault(d.name, []).append(d)
+    hot: dict = {}
+
+    def mark(fn, reason):
+        if id(fn) in hot:
+            return
+        hot[id(fn)] = reason
+        for sub in ast.walk(fn):
+            if sub is not fn and isinstance(
+                    sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                mark(sub, reason)
+
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if not any(name.endswith(t) for t in LAX_TAILS):
+            continue
+        for arg in list(node.args) + [kw.value for kw in node.keywords]:
+            if isinstance(arg, ast.Name):
+                for d in by_name.get(arg.id, ()):
+                    mark(d, f"passed to {name.rsplit('.', 1)[-1]}")
+    for d in defs:
+        if BUILDER_RE.search(d.name):
+            mark(d, f"program builder {d.name}")
+    return hot
+
+
+class HostSyncRule(Rule):
+    name = "host-sync-in-hot-path"
+    description = (".item()/float()/np.asarray/device_get on traced"
+                   " values inside scan bodies and program builders")
+
+    def check_module(self, mod: ModuleInfo):
+        if not mod.match(*SCOPE):
+            return
+        hot = _hot_functions(mod)
+        if not hot:
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            reason = None
+            for anc in mod.ancestors(node):
+                if isinstance(anc, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                    reason = hot.get(id(anc))
+                    break
+            if reason is None:
+                continue
+            yield from self._check_hot_call(mod, node, reason)
+
+    def _check_hot_call(self, mod: ModuleInfo, node: ast.Call, reason):
+        name = call_name(node)
+        tail = name.rsplit(".", 1)[-1]
+        if tail in SYNC_METHODS and "." in name:
+            yield Finding(
+                self.name, mod.rel, node.lineno,
+                f"`.{tail}()` in a hot scope ({reason}) forces a"
+                " device→host sync per round; keep results on device"
+                " and read them once after the scan")
+        elif name in SYNC_CALLS:
+            yield Finding(
+                self.name, mod.rel, node.lineno,
+                f"`{name}` in a hot scope ({reason}); pull values"
+                " after the program returns")
+        elif name in NP_PULLS or name in HOST_CASTS:
+            if not node.args:
+                return
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) or mentions_shape(arg):
+                return  # static metadata / literal — host math is fine
+            yield Finding(
+                self.name, mod.rel, node.lineno,
+                f"`{name}(...)` on a traced value in a hot scope"
+                f" ({reason}) materializes it on host mid-program;"
+                " use jnp ops or move it outside the body")
+
+
+RULES = [HostSyncRule()]

@@ -1,0 +1,55 @@
+"""oracle-pairing: every sparse/edge function needs its dense oracle
+test.
+
+The sparse plane's correctness story is bitwise equivalence against
+the dense legacy paths — greedy-on-CSR vs dense argmin, segment
+reductions vs masked sums, flat staging vs per-cell lists. That
+guarantee only holds for functions a test actually cross-checks. This
+repo-level rule lists every public function named ``*_edges`` or
+``*_flat`` defined under ``src/`` and flags the ones whose name never
+appears in the test tree — a sparse path with no oracle pairing is a
+sparse path whose equivalence can rot silently.
+
+The finding anchors at the ``def`` line, so a function that is
+genuinely untestable in isolation (e.g. a thin re-export) can carry a
+line waiver there.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.core import Finding, Rule
+
+NAME_RE = re.compile(r"(_edges|_flat)$")
+
+
+class OraclePairingRule(Rule):
+    name = "oracle-pairing"
+    description = ("public *_edges/*_flat function with no reference"
+                   " in the test tree (missing dense-oracle pairing)")
+
+    def check_repo(self, mods, ctx):
+        if not ctx.tests_sources:
+            return
+        corpus = "\n".join(ctx.tests_sources.values())
+        for mod in mods:
+            if mod.match("tests/*", "test_*.py"):
+                continue
+            for node in mod.tree.body:
+                if not isinstance(node, ast.FunctionDef):
+                    continue
+                if node.name.startswith("_"):
+                    continue
+                if not NAME_RE.search(node.name):
+                    continue
+                if re.search(rf"\b{re.escape(node.name)}\b", corpus):
+                    continue
+                yield Finding(
+                    self.name, mod.rel, node.lineno,
+                    f"`{node.name}` has no reference under tests/ —"
+                    " pair every sparse/edge path with a dense-oracle"
+                    " equivalence test")
+
+
+RULES = [OraclePairingRule()]

@@ -1,0 +1,101 @@
+"""recompile-hazard: jit call sites that defeat program caching.
+
+PR 5/8 put compile counts in CI because a silent retrace turns the
+sweep engine's 72→6 compile win back into 72. Three statically
+visible hazards:
+
+* ``jax.jit`` / ``shard_map`` / ``pmap`` invoked inside a Python
+  ``for``/``while`` — a fresh wrapper per iteration is a fresh cache
+  entry per iteration (hoist the transform and reuse the program);
+* float literals or mutable literals in ``static_argnums`` /
+  ``static_argnames`` values — floats hash but differ per sweep point
+  (retraces per value), lists/dicts/sets fail hashing outright;
+* ``lru_cache``-decorated program builders with mutable default
+  arguments or ``**kwargs`` — the cache key silently aliases or the
+  builder stops deduplicating (the ``_scan_program``/
+  ``_bucket_program`` pattern must key on hashable scalars only).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleInfo, Rule, call_name
+
+JIT_TAILS = ("jit", "pmap", "shard_map")
+LOOPS = (ast.For, ast.While, ast.AsyncFor)
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                    ast.DictComp, ast.SetComp)
+
+
+def _has_float(node: ast.AST) -> bool:
+    return any(isinstance(sub, ast.Constant)
+               and isinstance(sub.value, float)
+               for sub in ast.walk(node))
+
+
+def _lru_cached(fn: ast.FunctionDef) -> bool:
+    return any("lru_cache" in call_name(d) or "cache" == call_name(d)
+               or call_name(d).endswith(".cache")
+               for d in fn.decorator_list)
+
+
+class RecompileHazardRule(Rule):
+    name = "recompile-hazard"
+    description = ("jit in a Python loop / unhashable static args /"
+                   " mutable-keyed cached program builder")
+
+    def check_module(self, mod: ModuleInfo):
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(mod, node)
+            elif isinstance(node, ast.FunctionDef):
+                yield from self._check_builder(mod, node)
+
+    def _check_call(self, mod: ModuleInfo, node: ast.Call):
+        name = call_name(node)
+        tail = name.rsplit(".", 1)[-1]
+        if tail in JIT_TAILS and (
+                "." in name or tail in ("jit", "shard_map")):
+            for anc in mod.ancestors(node):
+                if isinstance(anc, ast.FunctionDef):
+                    break  # loops outside the enclosing def don't count
+                if isinstance(anc, LOOPS):
+                    yield Finding(
+                        self.name, mod.rel, node.lineno,
+                        f"`{tail}(...)` inside a Python loop builds a"
+                        " fresh program cache entry per iteration;"
+                        " hoist the transform and reuse it")
+                    break
+        for kw in node.keywords:
+            if kw.arg in ("static_argnums", "static_argnames"):
+                if isinstance(kw.value, MUTABLE_LITERALS):
+                    yield Finding(
+                        self.name, mod.rel, node.lineno,
+                        f"mutable literal in `{kw.arg}` — unhashable"
+                        " static args fail or alias the jit cache;"
+                        " use a tuple")
+                elif _has_float(kw.value):
+                    yield Finding(
+                        self.name, mod.rel, node.lineno,
+                        f"float in `{kw.arg}` — every distinct value"
+                        " retraces; pass floats as traced operands")
+
+    def _check_builder(self, mod: ModuleInfo, fn: ast.FunctionDef):
+        if not _lru_cached(fn):
+            return
+        if fn.args.kwarg is not None:
+            yield Finding(
+                self.name, mod.rel, fn.lineno,
+                f"cached program builder `{fn.name}` takes **kwargs —"
+                " the cache key stops deduplicating; enumerate"
+                " hashable scalar parameters")
+        for default in (fn.args.defaults + fn.args.kw_defaults):
+            if isinstance(default, MUTABLE_LITERALS):
+                yield Finding(
+                    self.name, mod.rel, fn.lineno,
+                    f"cached program builder `{fn.name}` has a mutable"
+                    " default — unhashable cache key; use scalars or"
+                    " tuples")
+
+
+RULES = [RecompileHazardRule()]

@@ -1,0 +1,75 @@
+"""rng-stream-discipline: producers must derive their seeds.
+
+The fault plane's twin contract (``FaultSchedule`` draws from
+``seed + 7919`` so fault randomness never perturbs the data stream),
+churn/flap producers, and the synthetic data generators all rely on
+every random stream being a pure function of an explicit, derived
+seed. A bare ``np.random.default_rng()`` (OS entropy — irreproducible
+runs), a module-level ``np.random.*`` draw (hidden global state), a
+hardcoded ``default_rng(0)`` or literal ``jax.random.PRNGKey(42)``
+(streams collide across call sites instead of deriving from the
+scenario seed) all break that discipline silently.
+
+Scope: the producer modules (topology, faults, synthetic data,
+pipeline, cost traces). Flagged sites must either derive the seed
+(``default_rng(seed + K)``, ``PRNGKey(cfg.seed)``) or carry a waiver
+explaining why a fixed stream is correct there.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, ModuleInfo, Rule, call_name
+
+SCOPE = ("core/topology.py", "core/faults.py", "core/costs.py",
+         "data/synthetic.py", "data/pipeline.py", "core/schedule.py")
+
+GLOBAL_NP_FNS = {"rand", "randn", "randint", "random", "choice",
+                 "permutation", "shuffle", "normal", "uniform",
+                 "poisson", "binomial", "seed"}
+
+
+class RngDisciplineRule(Rule):
+    name = "rng-stream-discipline"
+    description = ("underived rng seed in a producer module (bare/"
+                   "literal default_rng, global np.random, literal"
+                   " PRNGKey)")
+
+    def check_module(self, mod: ModuleInfo):
+        if not mod.match(*SCOPE):
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name.endswith("default_rng"):
+                if not node.args and not node.keywords:
+                    yield Finding(
+                        self.name, mod.rel, node.lineno,
+                        "`default_rng()` with no seed draws OS entropy"
+                        " — the produced stream is irreproducible;"
+                        " derive the seed from the scenario config")
+                elif (node.args
+                      and isinstance(node.args[0], ast.Constant)):
+                    yield Finding(
+                        self.name, mod.rel, node.lineno,
+                        f"`default_rng({node.args[0].value!r})`"
+                        " hardcodes the stream — call sites collide"
+                        " instead of deriving from the scenario seed")
+            elif name.endswith(".PRNGKey") or name == "PRNGKey":
+                if (node.args
+                        and isinstance(node.args[0], ast.Constant)):
+                    yield Finding(
+                        self.name, mod.rel, node.lineno,
+                        f"literal `PRNGKey({node.args[0].value!r})` —"
+                        " derive keys from the scenario seed and"
+                        " split/fold_in per stream")
+            elif (name.startswith(("np.random.", "numpy.random."))
+                  and name.rsplit(".", 1)[-1] in GLOBAL_NP_FNS):
+                yield Finding(
+                    self.name, mod.rel, node.lineno,
+                    f"`{name}` uses the hidden global numpy stream;"
+                    " thread an explicit Generator instead")
+
+
+RULES = [RngDisciplineRule()]

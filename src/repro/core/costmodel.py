@@ -228,21 +228,15 @@ _LISTENER = {"installed": False}
 
 
 def install_listener() -> None:
-    """Feed XLA compile durations into ``MODEL`` (idempotent)."""
+    """Feed XLA compile durations into ``MODEL`` (idempotent).
+
+    Subscribes through :mod:`repro.core.monitoring`'s single fan-out
+    registration — this module must never register its own global
+    ``jax.monitoring`` listener (they cannot be unregistered, and the
+    benchmark compile counter shares the same event)."""
     if _LISTENER["installed"]:
         return
-    import jax
+    from repro.core import monitoring
 
-    def _on_event(name, *a, **kw):
-        if name == "/jax/core/compile/backend_compile_duration":
-            dur = a[0] if a else kw.get("duration_secs", 0.0)
-            try:
-                MODEL.observe_compile(float(dur))
-            except (TypeError, ValueError):
-                MODEL.observe_compile(0.0)
-
-    try:
-        jax.monitoring.register_event_duration_secs_listener(_on_event)
-        _LISTENER["installed"] = True
-    except Exception:
-        pass
+    monitoring.subscribe_compile(MODEL.observe_compile)
+    _LISTENER["installed"] = True

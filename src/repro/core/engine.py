@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import sanitize
 from repro.data import pipeline as pl
 from repro.models import mnist as mm
 from repro.models.module import init_params
@@ -226,6 +227,7 @@ def _guarded_uploads(W, contributing, upl, cor, guard: bool,
     tree_map = jax.tree_util.tree_map
     contributing = contributing * upl
     Wu = tree_map(
+        # foglint: disable=nan-unsafe-masking -- intentional fault injection, not a guard: cor is a finite corruption multiplier on the upload; the protective select below uses jnp.where
         lambda p: p * cor.reshape(cor.shape + (1,) * (p.ndim - batch_axes)),
         W)
     if guard:
@@ -436,10 +438,13 @@ def run_rounds_scan(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
 
     fn = _scan_program(apply_fn, float(eta), prestage, use_faults,
                        guard_f, quorum_f)
-    res = fn(_stack(params, n), params, *args, *fault_ops)
-    losses, tl, ta, H_at = res[1:5]
-
-    jax.block_until_ready(losses)
+    # sanitize hook: under run_network_aware(sanitize=True) the guard
+    # disallows implicit transfers across the whole-horizon dispatch
+    # (staging above and history readback below are explicit, by design)
+    with sanitize.hot_loop_guard():
+        res = fn(_stack(params, n), params, *args, *fault_ops)
+        losses, tl, ta, H_at = res[1:5]
+        jax.block_until_ready(losses)
     agg_rounds = np.nonzero(is_agg)[0]
     tl, ta, H_at = np.asarray(tl), np.asarray(ta), np.asarray(H_at)
     out = {"device_loss": list(np.asarray(losses)),
@@ -509,12 +514,13 @@ def _run_scan_checkpointed(apply_fn, params, n, T, tau, eta, prestage,
             break
         t1 = min(t0 + step, T)
         sl = slice(t0, t1)
-        carry, ys = fn(
-            carry, x_dev,
-            None if xb_all is None else xb_all[sl],
-            None if idx_arg is None else idx_arg[sl],
-            yb[sl], wts[sl], counts[sl], act[sl], is_agg[sl], x_te,
-            y_te, *(op[sl] for op in fault_ops))
+        with sanitize.hot_loop_guard():
+            carry, ys = fn(
+                carry, x_dev,
+                None if xb_all is None else xb_all[sl],
+                None if idx_arg is None else idx_arg[sl],
+                yb[sl], wts[sl], counts[sl], act[sl], is_agg[sl], x_te,
+                y_te, *(op[sl] for op in fault_ops))
         for k, y in zip(keys, ys):
             hist[k][sl] = np.asarray(y)
         t0 = t1
@@ -1338,8 +1344,9 @@ def run_rounds_batched(apply_fn, params_list, x_tr, y_tr, x_te, y_te,
     _PHASE["stage_s"] += t_train0 - t_stage0
     fn = _bucket_program(apply_fn, float(eta), meta["prestage"], mesh,
                          use_faults, guard_f, quorum_f, staging)
-    res = fn(W0, wg0, x_dev, *staged_args)
-    jax.block_until_ready(res)
+    with sanitize.hot_loop_guard():
+        res = fn(W0, wg0, x_dev, *staged_args)
+        jax.block_until_ready(res)
     t_eval0 = time.perf_counter()
     _PHASE["program_s"] += t_eval0 - t_train0
     losses, H_w, wg_win = res[:3]

@@ -208,6 +208,7 @@ def predict_schedule(observed: NetworkSchedule, L: int = DEFAULT_WINDOWS,
         return NetworkSchedule.piecewise_edges(observed.n, edge_sets,
                                                bounds, active=active)
     link_rates = window_link_rates(observed, L)
+    # foglint: disable=dense-materialization -- dense-storage branch: observed already holds (n, n) rounds (guarded by DENSE_VIEW_MAX_N); the edgelist branch above is the scale path
     adjs = [np.array(observed.adj_at(0), dtype=bool, copy=True)]
     for w in range(1, len(bounds)):
         adjs.append(link_rates[w - 1] >= cut)
@@ -263,18 +264,35 @@ def schedule_prediction_accuracy(predicted: NetworkSchedule,
     link accuracy over the UNION of the two supports (links invented by
     the prediction count as errors, not just links it missed) and
     activity accuracy — diagnostics for the ``network_prediction``
-    bench."""
+    bench.
+
+    Computed entirely on edge keys — O(T·E log E), no (n, n) array —
+    so it also scores edgelist schedules past ``DENSE_VIEW_MAX_N``.
+    Within the union support U, round t's agreement count is
+    |U| − |P_t Δ Q_t| (cells outside both round supports agree by
+    being jointly absent); every count is an exact small integer, so
+    the ratio is bitwise-equal to the old dense-mask formula.
+    """
     assert (predicted.T, predicted.n) == (truth.T, truth.n)
-    support = np.zeros((truth.n, truth.n), bool)
-    for t in range(truth.T):
-        support |= np.asarray(truth.adj_at(t), bool)
-        support |= np.asarray(predicted.adj_at(t), bool)
+    n = truth.n
+
+    def keys(s: NetworkSchedule, t: int) -> np.ndarray:
+        src, dst = s.edges_at(t)
+        return np.unique(np.asarray(src, np.int64) * n
+                         + np.asarray(dst, np.int64))
+
+    rounds = [(keys(predicted, t), keys(truth, t))
+              for t in range(truth.T)]
+    support = np.unique(np.concatenate(
+        [k for pq in rounds for k in pq] or [np.empty(0, np.int64)]))
+    u = int(support.size)
     agree = total = 0.0
-    for t in range(truth.T):
-        p = np.asarray(predicted.adj_at(t), bool)[support]
-        q = np.asarray(truth.adj_at(t), bool)[support]
-        agree += float((p == q).sum())
-        total += float(support.sum())
+    for kp, kq in rounds:
+        sym_diff = (kp.size + kq.size
+                    - 2 * np.intersect1d(kp, kq,
+                                         assume_unique=True).size)
+        agree += float(u - sym_diff)
+        total += float(u)
     act_acc = float((predicted.activity() == truth.activity()).mean())
     return {"link_accuracy": agree / total if total else 1.0,
             "activity_accuracy": act_acc}

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core import engine as eng
 from repro.core import movement as mv
+from repro.core import sanitize as sz
 from repro.core.costs import CostTraces
 from repro.core.engine import (_stack, _sync, aggregate,  # noqa: F401
                                make_device_step, make_model)
@@ -53,7 +54,7 @@ class FedConfig:
 
 
 def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
-                      adj: np.ndarray, plan: mv.MovementPlan,
+                      adj: np.ndarray | None, plan: mv.MovementPlan,
                       streams: pl.FogStreams | None = None,
                       activity: np.ndarray | None = None,
                       engine: str = "scan", mesh=None,
@@ -64,8 +65,21 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                       checkpoint_every: int = 1,
                       resume: str | None = None,
                       stop_after: int | None = None,
-                      prepared: tuple | None = None) -> dict:
+                      prepared: tuple | None = None,
+                      sanitize=False) -> dict:
     """Train with a given movement plan. Returns history dict.
+
+    ``adj`` is accepted for signature symmetry with the planning layer
+    (the plan was solved against it) but training itself never reads
+    it — pass ``None`` rather than materializing a dense matrix.
+
+    ``sanitize`` — ``True`` or a :class:`repro.core.sanitize.
+    SanitizeConfig`: runs the engine under jax's runtime checkers
+    (``debug_nans``, optional tracer-leak checking, a transfer guard
+    around compiled-program dispatch, and a warm-recompile watchdog
+    when ``expect_warm`` is set). Small-n smoke harness — the debug
+    flags change jit cache keys and disable some optimizations, so
+    don't benchmark under it.
 
     ``prepared`` — optional precomputed ``_prepare_streams`` result
     (streams, processed, act_all, max_pts) for THIS scenario: skips
@@ -153,9 +167,10 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
         raise ValueError(f"unknown engine {engine!r}; "
                          f"expected one of {sorted(runners)} or 'auto'")
     runner = runners[engine]
-    hist.update(runner(apply_fn, w_global, x_tr, y_tr, x_te, y_te,
-                       processed, act_all, cfg.tau, cfg.eta, max_pts,
-                       **fault_kw, **ckpt_kw))
+    with sz.sanitized(sanitize):
+        hist.update(runner(apply_fn, w_global, x_tr, y_tr, x_te, y_te,
+                           processed, act_all, cfg.tau, cfg.eta,
+                           max_pts, **fault_kw, **ckpt_kw))
     return hist
 
 
@@ -367,7 +382,9 @@ def run_federated(cfg: FedConfig, data, **kw) -> dict:
     """No-movement baseline: G_i(t) = D_i(t)."""
     plan = mv.no_movement_plan(cfg.T, cfg.n)
     traces = kw.pop("traces", None)
-    adj = kw.pop("adj", np.ones((cfg.n, cfg.n), bool))
+    # no-movement training never reads the adjacency: don't default to
+    # a dense (n, n) ones matrix (10 GB at n=10⁵) nobody looks at
+    adj = kw.pop("adj", None)
     if traces is None:
         from repro.core.costs import synthetic_costs
         traces = synthetic_costs(cfg.n, cfg.T, np.random.default_rng(cfg.seed))
@@ -379,6 +396,7 @@ def churn_activity(cfg: FedConfig, rng: np.random.Generator) -> np.ndarray:
     ChurnProcess-produced :class:`NetworkSchedule` (identical rng
     stepping), so the engine masking and the movement plane share one
     producer."""
+    # foglint: disable=dense-materialization -- legacy compat shim: churn_schedule takes a dense base adjacency by contract and every caller is small-n
     sched = churn_schedule(np.ones((cfg.n, cfg.n), bool), cfg.T,
                            cfg.p_exit, cfg.p_entry, rng, tau=cfg.tau)
     return sched.activity()

@@ -1,0 +1,86 @@
+"""The single process-wide XLA compile-event registration.
+
+``jax.monitoring`` listeners cannot be unregistered, so every module
+that wants compile telemetry must NOT call
+``register_event_duration_secs_listener`` itself: before this module
+existed the cost-model EMA (``costmodel.install_listener``) and the
+benchmark compile counter (``benchmarks.run``) each registered their
+own global hook, which meant import order decided how many listeners
+ran per compile and a future third consumer would have made the
+duplication worse. Now there is exactly one registration, installed
+lazily on first use, that fans events out to subscribers:
+
+    from repro.core import monitoring
+    monitoring.subscribe_compile(lambda seconds: ...)
+    monitoring.compile_events()     # process-wide compile count
+
+``compile_events`` counts ``backend_compile`` events since installation
+(0 forever if ``jax.monitoring`` is unavailable) — the recompile
+watchdog in :mod:`repro.core.sanitize` and the benchmark provenance
+stamps both take deltas of it, so they share one counter instead of
+three drifting ones.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_SUBSCRIBERS: list = []
+_STATE = {"installed": False, "failed": False, "events": 0}
+
+
+def _ensure_installed() -> None:
+    if _STATE["installed"] or _STATE["failed"]:
+        return
+    import jax
+
+    def _on_event(name, *a, **kw):
+        if name != COMPILE_EVENT:
+            return
+        dur = a[0] if a else kw.get("duration_secs", 0.0)
+        try:
+            dur = float(dur)
+        except (TypeError, ValueError):
+            dur = 0.0
+        _STATE["events"] += 1
+        for fn in tuple(_SUBSCRIBERS):
+            try:
+                fn(dur)
+            except Exception:
+                # a broken subscriber must never take down the compile
+                # path (the listener runs inside jit dispatch) or
+                # starve the other subscribers
+                pass
+
+    try:
+        jax.monitoring.register_event_duration_secs_listener(_on_event)
+        _STATE["installed"] = True
+    except Exception:
+        _STATE["failed"] = True
+
+
+def subscribe_compile(fn: Callable[[float], None]) -> Callable[[float], None]:
+    """Add ``fn(duration_secs)`` to the fan-out (idempotent per fn)."""
+    _ensure_installed()
+    if fn not in _SUBSCRIBERS:
+        _SUBSCRIBERS.append(fn)
+    return fn
+
+
+def unsubscribe_compile(fn: Callable[[float], None]) -> None:
+    try:
+        _SUBSCRIBERS.remove(fn)
+    except ValueError:
+        pass
+
+
+def compile_events() -> int:
+    """backend_compile events observed since the listener installed."""
+    _ensure_installed()
+    return _STATE["events"]
+
+
+def listener_installed() -> bool:
+    _ensure_installed()
+    return _STATE["installed"]

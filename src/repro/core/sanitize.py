@@ -1,0 +1,132 @@
+"""Runtime sanitizer harness for the compiled fog engine.
+
+Static analysis (``repro.analysis``) catches what it can at parse
+time; this module wires jax's runtime checkers around the engine for
+small-n smoke runs so the remaining hazard classes fail loudly:
+
+* host-transfer guards (``transfer_guard_host_to_device`` /
+  ``_device_to_host`` = "disallow") around the staged hot loop — any
+  implicit device↔host transfer inside the compiled-program dispatch
+  (a stray ``np.asarray`` on a traced output, an accidental host
+  fallback) raises instead of silently serializing the pipeline.
+  Staging (explicit h2d uploads) and history readback stay outside
+  the guard: those transfers are the design.
+* ``jax_debug_nans`` / ``jax_check_tracer_leaks`` — NaN production
+  and leaked tracers surface at the operation that created them.
+* a recompile watchdog on the shared ``backend_compile`` fan-out
+  (:mod:`repro.core.monitoring`): a warm re-run that compiles
+  anything raises :class:`RecompileError` — the runtime twin of the
+  compile-count CI gates.
+
+Entry points: ``run_network_aware(..., sanitize=True)`` and
+``launch/train.py --sanitize``. NOTE: the debug flags are part of
+jit's cache key, so a sanitized warm pass must follow a sanitized
+cold pass (``launch.train`` runs the scenario twice under the same
+sanitize config and asserts the second pass compiles nothing).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from repro.core import monitoring
+
+
+class RecompileError(RuntimeError):
+    """A warm pass compiled when the watchdog expected zero compiles."""
+
+
+@dataclasses.dataclass
+class SanitizeConfig:
+    transfer_guard: bool = True     # disallow implicit transfers in the hot loop
+    debug_nans: bool = True
+    check_leaks: bool = False       # tracer-leak checking (slow; opt-in)
+    expect_warm: bool = False       # raise if anything compiles inside the scope
+
+    @classmethod
+    def coerce(cls, value) -> "SanitizeConfig | None":
+        if value is None or value is False:
+            return None
+        if value is True:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        raise TypeError(f"sanitize must be bool or SanitizeConfig, "
+                        f"got {type(value).__name__}")
+
+
+_ACTIVE: list = []
+
+
+def active() -> SanitizeConfig | None:
+    """The innermost active sanitize config, or None."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+@contextlib.contextmanager
+def sanitized(config=True):
+    """Run a block under the sanitizer: sets the debug config flags
+    (saved/restored), arms the recompile watchdog when
+    ``expect_warm``, and makes :func:`hot_loop_guard` live."""
+    import jax
+
+    cfg = SanitizeConfig.coerce(config)
+    if cfg is None:
+        yield None
+        return
+    saved = {"jax_debug_nans": jax.config.jax_debug_nans,
+             "jax_check_tracer_leaks": jax.config.jax_check_tracer_leaks}
+    _ACTIVE.append(cfg)
+    try:
+        jax.config.update("jax_debug_nans", cfg.debug_nans)
+        jax.config.update("jax_check_tracer_leaks", cfg.check_leaks)
+        with RecompileWatchdog(strict=cfg.expect_warm) as dog:
+            yield cfg
+        cfg.last_compiles = dog.compiles  # type: ignore[attr-defined]
+    finally:
+        _ACTIVE.pop()
+        for k, v in saved.items():
+            jax.config.update(k, v)
+
+
+@contextlib.contextmanager
+def hot_loop_guard():
+    """Engine-side hook wrapping compiled-program dispatch: a no-op
+    unless a :func:`sanitized` scope with ``transfer_guard`` is
+    active, in which case implicit transfers raise."""
+    cfg = active()
+    if cfg is None or not cfg.transfer_guard:
+        yield
+        return
+    import jax
+
+    # Host transfers are the hazard class; device-to-device stays
+    # allowed because mesh dispatch legitimately reshards staged
+    # single-device operands across the data mesh.
+    with jax.transfer_guard_host_to_device("disallow"), \
+            jax.transfer_guard_device_to_host("disallow"), \
+            jax.transfer_guard_device_to_device("allow"):
+        yield
+
+
+class RecompileWatchdog:
+    """Counts backend_compile events across a scope via the shared
+    monitoring fan-out; ``strict`` raises on scope exit if anything
+    compiled (warm re-runs must not)."""
+
+    def __init__(self, strict: bool = False):
+        self.strict = strict
+        self._start = 0
+        self.compiles = 0
+
+    def __enter__(self) -> "RecompileWatchdog":
+        self._start = monitoring.compile_events()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.compiles = monitoring.compile_events() - self._start
+        if exc_type is None and self.strict and self.compiles:
+            raise RecompileError(
+                f"{self.compiles} compile(s) inside a warm scope that"
+                " expected zero — a program cache key changed between"
+                " runs (shape, static arg, or debug-config drift)")

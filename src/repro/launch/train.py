@@ -134,13 +134,31 @@ def run_fog(args) -> dict:
     engine = resolve_engine(args.engine)
     if (args.checkpoint or args.resume) and args.engine == "auto":
         engine = "scan"                  # checkpointing is scan-only
-    hist = F.run_network_aware(cfg, data, traces, adj, plan,
-                               streams=streams, schedule=schedule,
-                               engine=engine, faults=faults,
-                               guard=not args.unguarded,
-                               quorum=args.quorum,
-                               checkpoint_path=args.checkpoint,
-                               resume=args.resume)
+    run_kw = dict(streams=streams, schedule=schedule, engine=engine,
+                  faults=faults, guard=not args.unguarded,
+                  quorum=args.quorum, checkpoint_path=args.checkpoint,
+                  resume=args.resume)
+    sanitize_report = None
+    if args.sanitize:
+        from repro.core import sanitize as sz
+
+        # runtime-sanitized smoke: a cold pass under the sanitizer
+        # (the debug flags are part of jit's cache key, so this pass
+        # compiles the programs the warm pass will reuse), then a warm
+        # re-run that raises RecompileError if anything compiles —
+        # plus transfer_guard("disallow") around the staged hot loop
+        # and debug_nans on both passes
+        F.run_network_aware(cfg, data, traces, adj, plan,
+                            sanitize=True, **run_kw)
+        warm = sz.SanitizeConfig(expect_warm=True)
+        hist = F.run_network_aware(cfg, data, traces, adj, plan,
+                                   sanitize=warm, **run_kw)
+        sanitize_report = {
+            "transfer_guard": True, "debug_nans": True,
+            "warm_compiles": int(getattr(warm, "last_compiles", 0))}
+    else:
+        hist = F.run_network_aware(cfg, data, traces, adj, plan,
+                                   **run_kw)
     cost = mv.plan_cost(plan, traces, D, error_model=args.error_model)
     out = {"mode": "fog", "setting": args.setting, "engine": engine,
            "schedule": sched_kind, "replan": replan,
@@ -152,6 +170,8 @@ def run_fog(args) -> dict:
         out["fault_summary"] = hist["fault_summary"]
         out["quorum_skips"] = int(sum(
             not ok for ok in hist.get("agg_quorum_ok", [])))
+    if sanitize_report is not None:
+        out["sanitize"] = sanitize_report
     print(json.dumps(out, default=float, indent=2))
     return out
 
@@ -180,6 +200,7 @@ def lm_movement_inputs(n_shards: int, batch: int, T_rounds: int,
     for t in range(T_rounds):
         dest = np.repeat(np.arange(n_shards), per_shard)
         for i in range(n_shards):
+            # foglint: disable=dense-materialization -- LM-demo sharding: n here is the shard count (≤ 8), not the fog-device axis
             j = int(np.argmax(plan.s[t, i]))
             if j != i:  # shard i's samples processed by shard j
                 dest[i * per_shard:(i + 1) * per_shard] = j
@@ -257,7 +278,7 @@ def run_lm(args) -> dict:
     out = {"mode": "lm", "arch": args.arch, "loss_first": losses[0],
            "loss_last": float(np.mean(losses[-5:])),
            "steps_per_s": args.steps / dt,
-           "moved_frac": float((plan.s * (1 - np.eye(shards))).sum()
+           "moved_frac": float((plan.s * (1 - np.eye(shards))).sum()  # foglint: disable=dense-materialization -- shard-count square (≤ 8), not the device axis
                                / plan.s.shape[0] / shards)}
     print(json.dumps(out, indent=2))
     return out
@@ -354,6 +375,12 @@ def main(argv=None):
                     help="continue a --checkpoint snapshot mid-horizon "
                          "(bitwise-equal on CPU to an uninterrupted "
                          "run)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="runtime sanitizer smoke: run the scenario "
+                         "cold then warm under debug_nans + "
+                         "transfer_guard('disallow') around the hot "
+                         "loop, raising if the warm pass recompiles "
+                         "(small-n checks, not a benchmark mode)")
     # lm
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--smoke", action="store_true", default=True)
