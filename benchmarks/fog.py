@@ -148,6 +148,10 @@ class Scenario:
     faults: "fl.FaultSchedule | None" = None
     guard: bool = True
     quorum: float = 0.0
+    # optional core.hierarchy.TierTree: aggregation composes up the
+    # tier tree on the scan substrate; hierarchical points train
+    # through the per-point loop (never a batched bucket)
+    hierarchy: object | None = None
 
 
 def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
@@ -157,7 +161,7 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
                   dynamics=None, p_flap=0.05, p_recover=0.5,
                   replan="oracle", mean_per_round=None, faults=None,
                   fault_rate=0.0, guard=True, quorum=0.0,
-                  corrupt_mode="nan", seed=0) -> Scenario:
+                  corrupt_mode="nan", tiers=None, seed=0) -> Scenario:
     """Build one sweep point (same setup recipe as ``fog_experiment``).
 
     ``dynamics``: None (auto: "churn" when p_exit/p_entry set, else
@@ -179,6 +183,11 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
     rng stream (seed + 7919), so a faulted sweep point shares streams,
     costs and topology bitwise with its fault-free twin. ``guard``/
     ``quorum``/``corrupt_mode`` configure the engine-side tolerance.
+
+    ``tiers`` — hierarchical aggregation: a ``core.hierarchy.TierTree``
+    or a CLI spec string (``"4@10,1@20"``; the first period must equal
+    ``scale.tau``). Hierarchical points always train through the
+    per-point loop (the batched bucket engine has no tier program).
     """
     rng = np.random.default_rng(seed)
     data = dataset(scale.n_train, scale.n_test)
@@ -212,11 +221,15 @@ def make_scenario(scale: BenchScale, *, key=None, n=10, model="mlp",
     fault_sched = faults if isinstance(faults, fl.FaultSchedule) else \
         fl.make_faults(faults, scale.T, n, scale.tau, rate=fault_rate,
                        seed=seed + 7919, corrupt=corrupt_mode)
+    hierarchy = tiers
+    if isinstance(tiers, str):
+        from repro.core import hierarchy as hr
+        hierarchy = hr.TierTree.from_spec(tiers, n)
     return Scenario(key=dict(key or {}), cfg=cfg, traces=traces, adj=adj,
                     D=D, streams=streams, setting=setting,
                     error_model=error_model, gamma=gamma,
                     schedule=schedule, replan=replan, faults=fault_sched,
-                    guard=guard, quorum=quorum)
+                    guard=guard, quorum=quorum, hierarchy=hierarchy)
 
 
 def _estimated(sc: Scenario):
@@ -436,12 +449,29 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
                       else resolve_engine(engine or "auto"))] \
         * len(scenarios)
     dispatches: list = [None] * len(scenarios)
+    # hierarchical points: the tier tree picks the compiled program, so
+    # they train per point on the scan substrate and never join a
+    # batched bucket
+    hier_idx = {b for b, sc in enumerate(scenarios)
+                if sc.hierarchy is not None}
+    if train and hier_idx:
+        for b in sorted(hier_idx):
+            sc = scenarios[b]
+            hists[b] = F.run_network_aware(
+                sc.cfg, data, sc.traces, sc.adj, plans[b],
+                streams=sc.streams, activity=sc.activity,
+                schedule=sc.schedule, engine="scan", faults=sc.faults,
+                guard=sc.guard, quorum=sc.quorum,
+                hierarchy=sc.hierarchy)
+            engines[b] = "hierarchical"
     if train and batch:
         cm.install_listener()
         allow_ragged = mesh is None or (mesh == "auto"
                                         and jax.device_count() == 1)
         groups: dict[tuple, list[int]] = {}
         for b, sc in enumerate(scenarios):
+            if b in hier_idx:
+                continue
             groups.setdefault(scenario_bucket_key(sc, bucket=bucket),
                               []).append(b)
         for gkey, idxs in groups.items():
@@ -517,6 +547,8 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
                 dispatches[b] = decision.as_row()
     elif train:
         for b, (sc, plan) in enumerate(zip(scenarios, plans)):
+            if b in hier_idx:
+                continue
             hists[b] = F.run_network_aware(sc.cfg, data, sc.traces,
                                            sc.adj, plan,
                                            streams=sc.streams,
@@ -531,7 +563,9 @@ def run_scenarios(scenarios: list[Scenario], scale: BenchScale, *,
         # a forced loop sweep compiles its per-point programs: tell
         # the cost model, so later dispatched sweeps price the loop
         # path as warm
-        for sc in scenarios:
+        for b, sc in enumerate(scenarios):
+            if b in hier_idx:
+                continue
             cm.MODEL.mark_loop_seen(
                 scenario_bucket_key(sc, bucket=bucket),
                 [_point_ident(sc)])

@@ -48,10 +48,30 @@ def compile_count() -> int:
     return monitoring.compile_events()
 
 
+# hierarchical-run provenance: set by benches that build a TierTree /
+# tier mesh (``set_tier_meta``); flat benches stamp the keys as None so
+# every bench JSON carries the same meta schema
+_TIER_META: dict = {"tier_shape": None, "mesh_dims": None}
+
+
+def set_tier_meta(tier_shape=None, mesh=None) -> None:
+    """Record the current bench's tier shape (group counts per level)
+    and mesh axis dims for the ``_bench_meta`` stamp; cleared back to
+    None at every ``_emit``."""
+    _TIER_META["tier_shape"] = (list(map(int, tier_shape))
+                                if tier_shape is not None else None)
+    if mesh is None:
+        _TIER_META["mesh_dims"] = None
+    else:
+        _TIER_META["mesh_dims"] = {str(k): int(v) for k, v
+                                   in dict(mesh.shape).items()}
+
+
 def _bench_meta() -> dict:
     """Provenance stamp so bench_*.json trajectories are comparable
-    across machines: git SHA, jax version, device kind and count, and
-    the compile counters for recompilation-regression tracking."""
+    across machines: git SHA, jax version, device kind and count, the
+    compile counters for recompilation-regression tracking, and the
+    tier/mesh shape for hierarchical benches (None on flat benches)."""
     import subprocess
 
     import jax
@@ -68,6 +88,8 @@ def _bench_meta() -> dict:
             "backend": jax.default_backend(),
             "device_kind": dev.device_kind,
             "device_count": jax.device_count(),
+            "tier_shape": _TIER_META["tier_shape"],
+            "mesh_dims": _TIER_META["mesh_dims"],
             "compiles_total": compile_count(),
             "compiles_during_bench": compile_count()
             - _COMPILES["last_emit"],
@@ -78,6 +100,7 @@ def _emit(name: str, seconds: float, derived: dict):
     os.makedirs(RESULTS, exist_ok=True)
     derived = {**derived, "meta": _bench_meta()}
     _COMPILES["last_emit"] = compile_count()
+    set_tier_meta()                      # tier stamp is per-bench
     with open(os.path.join(RESULTS, f"bench_{name}.json"), "w") as f:
         json.dump(derived, f, indent=2, default=float)
     compact = json.dumps(derived.get("headline", derived),
@@ -794,6 +817,185 @@ def sparse_scale(scale):
 
 
 @bench
+def hier_scale(scale):
+    """Hierarchical fog aggregation at fog scale (the tier-plane
+    headline): a 3-tier TierTree over n = 10⁵ devices (``--max-n``
+    caps it; CI runs the 10⁴ point) trains a T = 50 churn scenario
+    end-to-end on one host — movement solved strictly WITHIN tier-1
+    gateway groups, eq. (4) composed up the tree with per-tier τ — and
+    is compared against the flat all-to-server plane at the same τ_0:
+    rounds/sec and parameter bytes moved per window. The tracemalloc
+    no-(n, n) guard is asserted at EVERY tier's build phase and around
+    both trainings, the L=1 bitwise-collapse contract is re-proven
+    in-process, and per-tier traffic accounting lands in the JSON with
+    cross-tier bytes strictly below the flat plane's all-to-server
+    traffic at n ≥ 10⁴. Writes results/bench_hier_scale.json."""
+    import resource
+    import tracemalloc
+
+    import jax
+
+    from repro.core import engine as eng
+    from repro.core import federated as F
+    from repro.core import hierarchy as hr
+    from repro.core import movement as mv
+    from repro.core import topology as topo
+    from repro.core.costs import synthetic_edge_costs
+    from repro.data import pipeline as pl
+    from repro.launch import mesh as mesh_lib
+
+    t0 = time.time()
+    n_big = 102_400
+    if scale.max_n:
+        n_big = min(n_big, scale.max_n)
+    T_tr, DEG = 50, 8
+    taus = (5, 10, 20)
+    g1, g2 = max(2, n_big // 100), max(1, n_big // 3200)
+    tree = hr.TierTree.balanced(n_big, (g1, g2, 1), taus)
+    tmesh = mesh_lib.tier_mesh_for(tree)
+    set_tier_meta(tier_shape=tree.group_counts, mesh=tmesh)
+
+    # the smallest dense (n, n) array — bool at full scale, float64 at
+    # the CI point — must never fit under any phase's traced peak (see
+    # sparse_scale for the small-n caveat)
+    dense_floor = n_big * n_big * (1 if n_big >= 32_768 else 8)
+    peaks = {}
+
+    def guarded(tag, fn):
+        tracemalloc.start()
+        out = fn()
+        _, pk = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        peaks[tag] = pk
+        if n_big >= 8_192:
+            assert pk < dense_floor, (
+                f"{tag}: peak {pk} bytes >= {dense_floor} — a dense "
+                f"(n={n_big})² array fits under the traced peak")
+        return out
+
+    rng = np.random.default_rng(0)
+    x_tr = rng.random((4096, 28, 28)).astype(np.float32)
+    y_tr = rng.integers(0, 10, 4096)
+    x_te = rng.random((512, 28, 28)).astype(np.float32)
+    y_te = rng.integers(0, 10, 512)
+    data = (x_tr, y_tr, x_te, y_te)
+    src, dst = topo.random_sparse_edges(n_big, DEG, rng)
+
+    # tier-1 build plane, each stage under the no-(n, n) guard; the
+    # node_offset draws this tier's churn from its own rng stream
+    sched = guarded("tier1_schedule", lambda: topo.churn_schedule_edges(
+        n_big, src, dst, T_tr, 0.05, 0.2, np.random.default_rng(7),
+        tau=taus[0], node_offset=1))
+    etr = guarded("tier1_costs", lambda: synthetic_edge_costs(
+        n_big, T_tr, src, dst, np.random.default_rng(1)))
+    plan_h = guarded("tier1_movement",
+                     lambda: hr.solve_tier_movement(tree, etr, sched))
+    e = plan_h.edges
+    off = e.src != e.dst
+    cross = int((tree.parents[0][e.src[off]]
+                 != tree.parents[0][e.dst[off]]).sum())
+    assert cross == 0, (f"{cross} movement edges cross a gateway "
+                        "boundary")
+    # upper tiers move parameters, not data: their build product is
+    # the ancestor map + group census + traffic row — guard each
+    anc = tree.ancestors()
+    for lv in range(2, tree.levels + 1):
+        guarded(f"tier{lv}_staging",
+                lambda lv=lv: np.bincount(
+                    anc[lv - 1], minlength=tree.group_counts[lv - 1]))
+    params, _ = eng.make_model("linear", jax.random.PRNGKey(0))
+    n_params = int(sum(p.size for p in
+                       jax.tree_util.tree_leaves(params)))
+    traffic = guarded("tier_traffic",
+                      lambda: hr.tier_traffic(tree, n_params))
+    if n_big >= 10_240:
+        assert (traffic["cross_tier_bytes_per_window"]
+                < traffic["flat_bytes_per_window"]), traffic
+
+    flat = pl.poisson_streams_flat(n_big, T_tr, y_tr,
+                                   rng=np.random.default_rng(3),
+                                   mean_per_round=1.0)
+    cfg = F.FedConfig(n=n_big, T=T_tr, tau=taus[0], eta=0.1,
+                      model="linear", seed=0)
+
+    eng.reset_phase_timings()
+    t = time.time()
+    hist_h = guarded("train_hier", lambda: F.run_network_aware(
+        cfg, data, etr, None, plan_h, streams=flat, schedule=sched,
+        engine="scan", hierarchy=tree))
+    hier_s = time.time() - t
+    phases = eng.phase_timings()
+
+    # flat baseline at the same τ_0: full-support movement, all
+    # uploads converge on one server every window
+    plan_f = guarded("flat_movement", lambda: mv.realize_plan(
+        mv.greedy_linear(etr, sched), sched))
+    t = time.time()
+    hist_f = guarded("train_flat", lambda: F.run_network_aware(
+        cfg, data, etr, None, plan_f, streams=flat, schedule=sched,
+        engine="scan"))
+    flat_s = time.time() - t
+
+    # L=1 collapse contract, re-proven in-process at small n with
+    # churn: an L=1 tree's history must be bitwise the flat scan's
+    n_s = 64
+    src_s, dst_s = topo.random_sparse_edges(n_s, 4, np.random.default_rng(2))
+    sched_s = topo.churn_schedule_edges(
+        n_s, src_s, dst_s, 20, 0.1, 0.3, np.random.default_rng(7),
+        tau=taus[0])
+    flat_small = pl.poisson_streams_flat(n_s, 20, y_tr,
+                                         rng=np.random.default_rng(3),
+                                         mean_per_round=2.0)
+    etr_s = synthetic_edge_costs(n_s, 20, src_s, dst_s,
+                                 np.random.default_rng(1))
+    plan_s = mv.realize_plan(mv.greedy_linear(etr_s, sched_s), sched_s)
+    cfg_s = F.FedConfig(n=n_s, T=20, tau=taus[0], eta=0.1,
+                        model="linear", seed=0)
+    kw = dict(streams=flat_small, schedule=sched_s, engine="scan")
+    h1 = F.run_network_aware(cfg_s, data, etr_s, None, plan_s,
+                             hierarchy=hr.TierTree.balanced(
+                                 n_s, (1,), (taus[0],)), **kw)
+    h0 = F.run_network_aware(cfg_s, data, etr_s, None, plan_s, **kw)
+    l1_bitwise = all(
+        np.array_equal(np.asarray(h1[k]), np.asarray(h0[k]))
+        for k in ("device_loss", "test_loss", "test_acc", "H_agg"))
+    assert l1_bitwise, "L=1 TierTree diverged from the flat scan"
+
+    peak_all = max(peaks.values())
+    derived = {
+        "tiers": {"group_counts": list(tree.group_counts),
+                  "taus": list(tree.taus),
+                  "widest_bucket": tree.widest_bucket,
+                  "mesh_axes": {str(k): int(v) for k, v
+                                in dict(tmesh.shape).items()}},
+        "traffic": traffic,
+        "peaks_bytes": peaks,
+        "phase_timings": phases,
+        "ru_maxrss_kb": resource.getrusage(
+            resource.RUSAGE_SELF).ru_maxrss,
+        "train": {"n": n_big, "T": T_tr,
+                  "samples": int(flat.idx.shape[0]),
+                  "hier_s": hier_s, "flat_s": flat_s,
+                  "acc_hier": hist_h["test_acc"],
+                  "acc_flat": hist_f["test_acc"]},
+        "headline": {
+            "n": n_big,
+            "levels": tree.levels,
+            "rounds_per_s_hier": T_tr / hier_s,
+            "rounds_per_s_flat": T_tr / flat_s,
+            "cross_tier_bytes_per_window":
+                traffic["cross_tier_bytes_per_window"],
+            "flat_window_bytes": traffic["flat_bytes_per_window"],
+            "cross_over_flat": traffic["cross_over_flat"],
+            "train_peak_over_nn": peak_all / (n_big * n_big),
+            "no_dense_nn_materialized": bool(peak_all < dense_floor),
+            "l1_collapse_bitwise": bool(l1_bitwise),
+            "final_acc_hier": hist_h["test_acc"][-1],
+            "final_acc_flat": hist_f["test_acc"][-1]}}
+    _emit("hier_scale", time.time() - t0, derived)
+
+
+@bench
 def network_dynamics(scale):
     """Paper §V-E network-dynamics study through the schedule plane:
     accuracy and total resource cost vs churn rate, replanning-on-event
@@ -1419,12 +1621,13 @@ def dryrun_roofline(scale):
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names")
+                    help="comma-separated benchmark names or glob "
+                    "patterns (e.g. 'hier_*,sparse_scale')")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--max-n", type=int, default=0,
                     help="cap the device count of the scale sweeps "
-                    "(sparse_scale); 0 = no cap")
+                    "(sparse_scale, hier_scale); 0 = no cap")
     ap.add_argument("--repeat", type=int, default=0,
                     help="extra warm repetitions per timed sweep "
                     "(scenario bench takes the min, for stable warm "
@@ -1437,15 +1640,25 @@ def main(argv=None) -> None:
         scale = _dc.replace(scale, max_n=args.max_n)
     if args.repeat:
         scale = _dc.replace(scale, repeats=max(args.repeat, 1))
-    names = ([s.strip() for s in args.only.split(",") if s.strip()]
-             if args.only else list(_REGISTRY))
+    if args.only:
+        # each comma token is an exact name or a glob (``hier_*``);
+        # expansion preserves registry order and de-dups
+        import fnmatch
+        names = []
+        for tok in (s.strip() for s in args.only.split(",")):
+            if not tok:
+                continue
+            hits = fnmatch.filter(_REGISTRY, tok)
+            if not hits:
+                raise SystemExit(f"unknown benchmark {tok!r} (no exact "
+                                 f"or glob match); known: "
+                                 f"{sorted(_REGISTRY)}")
+            names += [h for h in hits if h not in names]
+    else:
+        names = list(_REGISTRY)
     print("name,us_per_call,derived")
     for name in names:
-        fn = _REGISTRY.get(name)
-        if fn is None:
-            raise SystemExit(f"unknown benchmark {name!r}; "
-                             f"known: {sorted(_REGISTRY)}")
-        fn(scale)
+        _REGISTRY[name](scale)
 
 
 if __name__ == "__main__":

@@ -5,10 +5,12 @@ The sparse plane's correctness story is bitwise equivalence against
 the dense legacy paths — greedy-on-CSR vs dense argmin, segment
 reductions vs masked sums, flat staging vs per-cell lists. That
 guarantee only holds for functions a test actually cross-checks. This
-repo-level rule lists every public function named ``*_edges`` or
-``*_flat`` defined under ``src/`` and flags the ones whose name never
-appears in the test tree — a sparse path with no oracle pairing is a
-sparse path whose equivalence can rot silently.
+repo-level rule lists every public function named ``*_edges``,
+``*_flat``, ``*_tier`` or ``*_hierarchical`` defined under ``src/``
+and flags the ones whose name never appears in the test tree — a
+sparse or hierarchical path with no oracle pairing is a path whose
+equivalence (tier twins against their flat oracle included) can rot
+silently.
 
 The finding anchors at the ``def`` line, so a function that is
 genuinely untestable in isolation (e.g. a thin re-export) can carry a
@@ -21,13 +23,14 @@ import re
 
 from repro.analysis.core import Finding, Rule
 
-NAME_RE = re.compile(r"(_edges|_flat)$")
+NAME_RE = re.compile(r"(_edges|_flat|_tier|_hierarchical)$")
 
 
 class OraclePairingRule(Rule):
     name = "oracle-pairing"
-    description = ("public *_edges/*_flat function with no reference"
-                   " in the test tree (missing dense-oracle pairing)")
+    description = ("public *_edges/*_flat/*_tier/*_hierarchical "
+                   "function with no reference in the test tree "
+                   "(missing flat/dense-oracle pairing)")
 
     def check_repo(self, mods, ctx):
         if not ctx.tests_sources:
@@ -48,8 +51,8 @@ class OraclePairingRule(Rule):
                 yield Finding(
                     self.name, mod.rel, node.lineno,
                     f"`{node.name}` has no reference under tests/ —"
-                    " pair every sparse/edge path with a dense-oracle"
-                    " equivalence test")
+                    " pair every sparse/edge/tier path with a"
+                    " flat/dense-oracle equivalence test")
 
 
 RULES = [OraclePairingRule()]

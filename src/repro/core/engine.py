@@ -191,6 +191,41 @@ def aggregate_edges(W, H: jnp.ndarray, device_ids, prev_global, *,
     return w_new
 
 
+def aggregate_tier(W, H: jnp.ndarray, group_ids, num_groups: int, *,
+                   use_pallas=None):
+    """Eq. (4) applied PER GROUP of one tier: ``W`` is a (m, ...) stack
+    (devices at tier 1, child groups above), ``H`` the (m,) cumulative
+    weights, ``group_ids`` the (m,) member→group map. Returns the
+    ``(num_groups, ...)`` stack of group models plus the per-group
+    weight totals ``H_g = segment_sum(H)``, so tiers compose: feeding
+    the outputs straight back in telescopes to the flat eq. (4) over
+    the union. One segment-reduce per leaf — segments are (group,
+    parameter) pairs — through the same ``kernels.ops.segment_sum``
+    dispatch as :func:`aggregate_edges`, with identical divide/where
+    arithmetic: a group's row is bitwise what ``aggregate_edges`` over
+    its ascending member list produces. Empty groups (H_g == 0) come
+    back as zeros — callers mask on ``H_g > 0``."""
+    from repro.kernels import ops
+    gi = jnp.asarray(group_ids, jnp.int32)
+    m = gi.shape[0]
+    Hg = ops.segment_sum(H, gi, num_segments=num_groups,
+                         use_pallas=use_pallas)
+
+    def agg(a):
+        P = int(np.prod(a.shape[1:], dtype=np.int64)) or 1
+        flat = a.reshape(m, P) * H[:, None]              # (m, P)
+        seg = (gi[:, None] * np.int32(P)
+               + jnp.arange(P, dtype=jnp.int32)[None]).reshape(-1)
+        s = ops.segment_sum(flat.reshape(-1), seg,
+                            num_segments=num_groups * P,
+                            use_pallas=use_pallas).reshape(num_groups, P)
+        out = jnp.where(Hg[:, None] > 0,
+                        s / jnp.maximum(Hg, 1e-9)[:, None], 0.0)
+        return out.reshape((num_groups,) + a.shape[1:]).astype(a.dtype)
+
+    return jax.tree_util.tree_map(agg, W), Hg
+
+
 def _sync(W, w_global, active):
     def s(stack, g):
         mask = active.reshape((-1,) + (1,) * g.ndim)
@@ -248,17 +283,27 @@ def _guarded_uploads(W, contributing, upl, cor, guard: bool,
 
 
 def _make_scan_body(apply_fn, vstep, prestage: bool, faults: bool,
-                    guard: bool, quorum: float, x_tr, x_te, y_te):
+                    guard: bool, quorum: float, x_tr, x_te, y_te,
+                    hier=None):
     """The per-round scan body, shared by the monolithic program and
     the window-chunked checkpoint driver (same closure -> same jaxpr ->
     the chunked dispatches reproduce the monolithic scan bit for bit).
     With ``faults`` the xs gain (upload_ok, corrupt) rows and the
     aggregation runs guarded + quorum-gated; without, the trace is
-    exactly the historical clean program."""
+    exactly the historical clean program.
+
+    ``hier`` — optional :class:`_HierSpec`: the xs gain a trailing
+    per-round ``lvl`` row (highest aggregating tier, 0 = none) and the
+    aggregation branch composes eq. (4) up the tier tree instead of
+    straight to the server (see :func:`run_rounds_hierarchical`). With
+    ``hier=None`` this function is untouched — the flat trace is the
+    historical program, bit for bit."""
     tree_map = jax.tree_util.tree_map
 
     def body(carry, xs):
         W, wg, H, waiting = carry
+        if hier is not None:
+            xs, lvl = xs[:-1], xs[-1]
         if faults:
             xb, idx, yb, w, cnt, a, agg, upl, cor = xs
         else:
@@ -305,6 +350,84 @@ def _make_scan_body(apply_fn, vstep, prestage: bool, faults: bool,
             if faults:
                 out += (z, jnp.float32(1.0))
             return out
+
+        if hier is not None:
+            L = len(hier.num_groups)
+            anc = [jnp.asarray(a, jnp.int32) for a in hier.anc]
+            is_top = lvl >= L
+
+            def hier_do_agg(ops):
+                W, wg, H, waiting = ops
+                if faults:
+                    Wu, contrib = _guarded_uploads(W, active, upl, cor,
+                                                   guard, 1)
+                    surv = contrib.sum()
+                    qok = surv >= quorum * active.sum()
+                else:
+                    Wu, contrib = W, active
+                    qok = None
+                # compose eq. (4) up the tree: tier l aggregates tier
+                # l-1's stack under CUMULATIVE H weights, so feeding
+                # each tier's (models, H_g) into the next telescopes to
+                # the flat eq. (4) over all contributing devices — the
+                # top row IS the global model
+                Wl, Hl = Wu, H * contrib
+                tiers = []
+                for gids, ng in zip(hier.group_ids, hier.num_groups):
+                    Wl, Hl = aggregate_tier(Wl, Hl, gids, ng)
+                    tiers.append((Wl, Hl))
+                Wtop, Htop = tiers[-1]
+                ok_top = is_top & (Htop[0] > 0)
+                if qok is not None:
+                    ok_top = ok_top & qok
+                wg2 = tree_map(
+                    lambda nw, old: jnp.where(ok_top, nw[0], old),
+                    Wtop, wg)
+
+                # every device syncs from its ancestor group at the
+                # round's highest aggregating tier; empty groups
+                # (H_g == 0) leave their members' params untouched
+                def pick(lv):
+                    Wg, Hg = tiers[lv]
+                    return (tree_map(lambda g: g[anc[lv]], Wg),
+                            Hg[anc[lv]])
+
+                target, Hsel = jax.lax.switch(
+                    jnp.maximum(lvl - 1, 0),
+                    [lambda lv=lv: pick(lv) for lv in range(L)])
+                sync_ok = (a > 0.5) & (Hsel > 0)
+                if qok is not None:
+                    sync_ok = sync_ok & qok
+                W2 = tree_map(
+                    lambda p, tg: jnp.where(
+                        sync_ok.reshape(sync_ok.shape
+                                        + (1,) * (p.ndim - 1)), tg, p),
+                    W, target)
+                # H accumulates across sub-tier windows and resets only
+                # once the TOP tier has consumed it (that is what makes
+                # the tier composition telescope); quorum failure skips
+                # the whole event, flat-plane style
+                if faults:
+                    H2 = jnp.where(is_top & qok, jnp.zeros_like(H), H)
+                    waiting2 = jnp.where(qok, 1.0 - a, waiting)
+                else:
+                    H2 = jnp.where(is_top, jnp.zeros_like(H), H)
+                    waiting2 = 1.0 - a
+
+                def ev(_):
+                    logits = apply_fn(wg2, x_te)
+                    return mm.ce_loss(logits, y_te), mm.accuracy(logits,
+                                                                 y_te)
+
+                tl, ta = jax.lax.cond(
+                    is_top, ev,
+                    lambda _: (jnp.float32(0.0), jnp.float32(0.0)), None)
+                out = (W2, wg2, H2, waiting2, tl, ta, H)
+                if faults:
+                    out += (surv, qok.astype(jnp.float32))
+                return out
+
+            do_agg = hier_do_agg
 
         res = jax.lax.cond(agg, do_agg, skip, (W, wg, H, waiting))
         W, wg, H, waiting = res[:4]
@@ -456,6 +579,143 @@ def run_rounds_scan(apply_fn, params, x_tr, y_tr, x_te, y_te, processed,
         surv, qokf = np.asarray(res[5]), np.asarray(res[6])
         out["agg_survivors"] = [float(v) for v in surv[agg_rounds]]
         out["agg_quorum_ok"] = [bool(v > 0) for v in qokf[agg_rounds]]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# hierarchical (tier-tree) scan path
+# ---------------------------------------------------------------------------
+
+# static tier shape closed over by the compiled hierarchical program:
+# per-level member->group maps, group counts, and per-level device
+# ancestor maps (all host numpy; they become jit constants)
+_HierSpec = collections.namedtuple("_HierSpec",
+                                   "group_ids num_groups anc")
+
+# lru_cache keys must be hashable, so the program cache keys on the
+# tree FINGERPRINT and the spec arrays ride this side table
+_HIER_SPECS: dict = {}
+
+
+@functools.lru_cache(maxsize=8)
+def _hier_program(apply_fn, eta: float, prestage: bool,
+                  faults: bool = False, guard: bool = False,
+                  quorum: float = 0.0, tree_fp: str = ""):
+    """One jitted program per (model, η, staging mode, fault config,
+    tier-tree shape). The per-round aggregation LEVEL arrives as a
+    traced xs row, so trees with identical shape but different τ
+    chains share one compiled program."""
+    spec = _HIER_SPECS[tree_fp]
+    vstep = jax.vmap(_device_step_fn(apply_fn, eta))
+
+    def train(W0, wg0, x_tr, xb_all, idx_all, yb_all, w_all, counts,
+              act, is_agg, x_te, y_te, lvl, *fault_ops):
+        n = counts.shape[1]
+        body = _make_scan_body(apply_fn, vstep, prestage, faults, guard,
+                               quorum, x_tr, x_te, y_te, hier=spec)
+        carry0 = (W0, wg0, jnp.zeros(n, jnp.float32),
+                  jnp.zeros(n, jnp.float32))
+        xs = (xb_all, idx_all, yb_all, w_all, counts, act, is_agg)
+        xs = xs + tuple(fault_ops) + (lvl,)
+        (_, wg, _, _), ys = jax.lax.scan(body, carry0, xs)
+        return (wg,) + ys
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(train, donate_argnums=donate)
+
+
+def run_rounds_hierarchical(apply_fn, params, x_tr, y_tr, x_te, y_te,
+                            processed, act_all, tau: int, eta: float,
+                            max_pts: int, *, tree, faults=None,
+                            guard: bool = True,
+                            quorum: float = 0.0) -> dict:
+    """Tier-aware window scan over a :class:`repro.core.hierarchy.
+    TierTree`: local SGD every round, and at each round whose index
+    hits a tier period the eq. (4) aggregation composes UP the tree —
+    devices to gateways, gateways to regional groups, … — with devices
+    syncing from their ancestor at the round's highest aggregating
+    tier. H accumulates across sub-tier windows and resets once the
+    top tier consumes it, so the top-tier model telescopes to the flat
+    eq. (4) over all contributing devices. The global history
+    (test_loss / test_acc / H_agg / agg_round) is reported at TOP-tier
+    rounds; ``tier_agg_round``/``tier_agg_level`` record the full
+    per-tier cadence.
+
+    An L=1 tree delegates to :func:`run_rounds_scan` — the same
+    lru-cached flat program, so the collapse is bitwise by
+    construction (the contract ``tests/test_hierarchy.py`` pins).
+
+    ``faults`` ride exactly as on the flat path (crash outages ANDed
+    into activity, guarded uploads at the DEVICE tier, quorum gating
+    the whole composed event)."""
+    if tau != tree.taus[0]:
+        raise ValueError(f"run tau={tau} but the tier tree aggregates "
+                         f"its first tier every {tree.taus[0]}")
+    if tree.levels == 1:
+        return run_rounds_scan(apply_fn, params, x_tr, y_tr, x_te, y_te,
+                               processed, act_all, tau, eta, max_pts,
+                               faults=faults, guard=guard, quorum=quorum)
+    if isinstance(processed, pl.FlatStreams):
+        T, n = processed.T, processed.n
+    else:
+        T, n = len(processed), len(processed[0])
+    if n != tree.n:
+        raise ValueError(f"run has n={n} devices but the tree has "
+                         f"n={tree.n}")
+    idx, yb, wts, counts = pl.stage_rounds(processed, y_tr, max_pts)
+
+    t_tier0 = time.perf_counter()
+    lvl = tree.level_rounds(T)
+    is_agg = lvl > 0
+    fp = tree.fingerprint()
+    if fp not in _HIER_SPECS:
+        _HIER_SPECS[fp] = _HierSpec(group_ids=tree.parents,
+                                    num_groups=tree.group_counts,
+                                    anc=tree.ancestors())
+    add_phase_time("tier_agg_s", time.perf_counter() - t_tier0)
+
+    use_faults = faults is not None
+    act_arr = np.asarray(act_all)
+    fault_ops = ()
+    if use_faults:
+        act_arr = np.asarray(act_all, bool) & faults.activity_mask()
+        fault_ops = _stage_fault_ops(faults, T, n, tau)
+    guard_f = bool(guard) if use_faults else False
+    quorum_f = float(quorum) if use_faults else 0.0
+
+    x_dev = _to_device_cached(x_tr)
+    idx_dev = jnp.asarray(idx)
+    item_bytes = int(np.prod(x_tr.shape[1:], dtype=np.int64)) * 4
+    prestage = T * n * max_pts * item_bytes <= PRESTAGE_LIMIT_BYTES
+    if prestage:
+        xb_all, idx_arg = jnp.take(x_dev, idx_dev, axis=0), None
+    else:
+        xb_all, idx_arg = None, idx_dev
+
+    args = (x_dev, xb_all, idx_arg, jnp.asarray(yb), jnp.asarray(wts),
+            jnp.asarray(counts), jnp.asarray(act_arr, jnp.float32),
+            jnp.asarray(is_agg), _to_device_cached(x_te),
+            _to_device_cached(y_te), jnp.asarray(lvl))
+
+    fn = _hier_program(apply_fn, float(eta), prestage, use_faults,
+                       guard_f, quorum_f, fp)
+    with sanitize.hot_loop_guard():
+        res = fn(_stack(params, n), params, *args, *fault_ops)
+        losses, tl, ta, H_at = res[1:5]
+        jax.block_until_ready(losses)
+    top = np.nonzero(lvl == tree.levels)[0]
+    tl, ta, H_at = np.asarray(tl), np.asarray(ta), np.asarray(H_at)
+    out = {"device_loss": list(np.asarray(losses)),
+           "test_loss": [float(v) for v in tl[top]],
+           "test_acc": [float(v) for v in ta[top]],
+           "agg_round": [int(t) for t in top],
+           "H_agg": list(H_at[top]),
+           "tier_agg_round": [int(t) for t in np.nonzero(is_agg)[0]],
+           "tier_agg_level": [int(v) for v in lvl[is_agg]]}
+    if use_faults:
+        surv, qokf = np.asarray(res[5]), np.asarray(res[6])
+        out["agg_survivors"] = [float(v) for v in surv[top]]
+        out["agg_quorum_ok"] = [bool(v > 0) for v in qokf[top]]
     return out
 
 
@@ -1117,10 +1377,12 @@ def _staged_fingerprint(processed_list, act_list, tau, bucket, staging,
 # per-phase wall-clock accumulators for the batched path, surfaced in
 # bench breakdowns: "stage" covers host staging + fingerprint + upload
 # dispatch, "train" the program dispatch + eval drain + history
-# assembly ("program"/"eval" are the two big slices inside "train").
-# Reset/read around a timed region via the accessors.
+# assembly ("program"/"eval" are the two big slices inside "train"),
+# "tier_agg" the hierarchical plane's host-side slice (tier staging +
+# traffic accounting) so bench breakdowns separate intra-tier compute
+# from up-tree work. Reset/read around a timed region via accessors.
 _PHASE = {"stage_s": 0.0, "program_s": 0.0, "eval_s": 0.0,
-          "train_s": 0.0}
+          "train_s": 0.0, "tier_agg_s": 0.0}
 
 
 def phase_timings() -> dict:
@@ -1128,7 +1390,8 @@ def phase_timings() -> dict:
 
 
 def reset_phase_timings() -> None:
-    _PHASE.update(stage_s=0.0, program_s=0.0, eval_s=0.0, train_s=0.0)
+    _PHASE.update(stage_s=0.0, program_s=0.0, eval_s=0.0, train_s=0.0,
+                  tier_agg_s=0.0)
 
 
 def add_phase_time(phase: str, seconds: float) -> None:

@@ -66,7 +66,7 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                       resume: str | None = None,
                       stop_after: int | None = None,
                       prepared: tuple | None = None,
-                      sanitize=False) -> dict:
+                      sanitize=False, hierarchy=None) -> dict:
     """Train with a given movement plan. Returns history dict.
 
     ``adj`` is accepted for signature symmetry with the planning layer
@@ -122,6 +122,13 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
     ``checkpoint_path``/``checkpoint_every``/``resume``/``stop_after``
     — window-boundary checkpointing of the scan engine (see
     ``core.engine.run_rounds_scan``); other engines reject them.
+
+    ``hierarchy`` — optional :class:`repro.core.hierarchy.TierTree`:
+    aggregation composes up the tier tree on the scan substrate
+    (``core.engine.run_rounds_hierarchical``), with the tree's first
+    tier period required to equal ``cfg.tau``. Only ``engine`` values
+    "scan"/"auto"/"hierarchical" compose with it (the tree picks the
+    compiled program); an L=1 tree reproduces the flat scan bitwise.
     """
     x_tr, y_tr, x_te, y_te = data
     if prepared is not None:
@@ -135,8 +142,28 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
 
     hist = _history_base(cfg, y_tr, streams, processed, act_all)
 
-    engine = eng.resolve_engine(engine)
-    if isinstance(streams, pl.FlatStreams) and engine != "scan":
+    if hierarchy is not None:
+        if engine not in ("auto", "scan", "hierarchical"):
+            raise ValueError("hierarchy= runs on the scan substrate; "
+                             f"got engine={engine!r}")
+        if hierarchy.n != cfg.n:
+            raise ValueError(f"tier tree has n={hierarchy.n} devices "
+                             f"but cfg.n={cfg.n}")
+        if hierarchy.taus[0] != cfg.tau:
+            raise ValueError(f"tier tree aggregates its first tier "
+                             f"every {hierarchy.taus[0]} rounds but "
+                             f"cfg.tau={cfg.tau}")
+        engine = "hierarchical"
+        hist["hierarchy"] = {"levels": hierarchy.levels,
+                             "group_counts": list(hierarchy.group_counts),
+                             "taus": list(hierarchy.taus)}
+    else:
+        if engine == "hierarchical":
+            raise ValueError("engine='hierarchical' needs a hierarchy= "
+                             "TierTree")
+        engine = eng.resolve_engine(engine)
+    if (isinstance(streams, pl.FlatStreams)
+            and engine not in ("scan", "hierarchical")):
         raise ValueError("FlatStreams sparse staging is a scan-engine "
                          f"feature; got engine={engine!r}")
     fault_kw = {}
@@ -154,6 +181,8 @@ def run_network_aware(cfg: FedConfig, data, traces: CostTraces,
                        checkpoint_every=checkpoint_every,
                        resume=resume, stop_after=stop_after)
     runners = {"scan": eng.run_rounds_scan,
+               "hierarchical": functools.partial(
+                   eng.run_rounds_hierarchical, tree=hierarchy),
                "sharded": functools.partial(eng.run_rounds_sharded,
                                             mesh=mesh),
                # engine="batched" uses the mesh as given — None is the

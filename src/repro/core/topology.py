@@ -219,15 +219,38 @@ def link_flap_schedule(adj: np.ndarray, T: int, rng: np.random.Generator,
     return NetworkSchedule.from_events(base, T, events)
 
 
+def _tier_stream(rng: np.random.Generator,
+                 node_offset: int) -> np.random.Generator:
+    """Decorrelate per-tier schedule draws from ONE seed source:
+    ``node_offset == 0`` returns ``rng`` untouched (bitwise-stable flat
+    behavior), a nonzero offset consumes one draw from ``rng`` as
+    entropy and spawns an independent child stream keyed by the
+    offset. Two tiers built from the same seed with different offsets
+    therefore churn/flap DIFFERENT edges, while the same (seed,
+    offset) pair stays reproducible."""
+    if not node_offset:
+        return rng
+    seq = np.random.SeedSequence(entropy=int(rng.integers(2 ** 63)),
+                                 spawn_key=(int(node_offset),))
+    return np.random.default_rng(seq)
+
+
 def churn_schedule_edges(n: int, src, dst, T: int, p_exit: float,
                          p_entry: float, rng: np.random.Generator, *,
-                         tau: int | None = None) -> NetworkSchedule:
+                         tau: int | None = None,
+                         node_offset: int = 0) -> NetworkSchedule:
     """Sparse producer for node churn: identical :class:`ChurnProcess`
     rng stepping to :func:`churn_schedule` (same seed ⇒ bitwise-equal
     activity trace), but the topology enters as ``(src, dst)`` edge
     arrays and the result is an edge-list schedule — no dense mask is
-    ever built, so this is the producer for n=10⁵⁺ scenarios."""
-    proc = ChurnProcess(n, p_exit, p_entry, rng)
+    ever built, so this is the producer for n=10⁵⁺ scenarios.
+
+    ``node_offset`` — tier/subset decorrelation: per-tier schedules
+    drawn from one seed used to share the rng stream (two tiers with
+    the same seed churned IDENTICAL node patterns); pass each tier's
+    first node id (or any distinct int) to draw an independent stream
+    per tier. ``0`` preserves the historical stream bitwise."""
+    proc = ChurnProcess(n, p_exit, p_entry, _tier_stream(rng, node_offset))
     rows = []
     for t in range(T):
         rows.append(proc.step())
@@ -241,14 +264,20 @@ def churn_schedule_edges(n: int, src, dst, T: int, p_exit: float,
 def link_flap_schedule_edges(n: int, src, dst, T: int,
                              rng: np.random.Generator, *,
                              p_down: float = 0.05,
-                             p_up: float = 0.5) -> NetworkSchedule:
+                             p_up: float = 0.5,
+                             node_offset: int = 0) -> NetworkSchedule:
     """Sparse producer for link flap: one uniform draw per UNORDERED
     base pair per round (O(T·E), never an (n, n) draw), both directions
     of a pair flapping together, emitted as edge-delta link events on
     an edge-list schedule. Seeded and deterministic; the rng stream
     differs from the dense :func:`link_flap_schedule` (which burns an
     (n, n) draw per round) — equivalence suites compare replay
-    semantics via ``to_edgelist``, not producer rng."""
+    semantics via ``to_edgelist``, not producer rng.
+
+    ``node_offset`` — see :func:`churn_schedule_edges`: distinct
+    offsets decorrelate per-tier flap streams drawn from one seed;
+    ``0`` preserves the historical stream bitwise."""
+    rng = _tier_stream(rng, node_offset)
     src = np.asarray(src, np.int64).ravel()
     dst = np.asarray(dst, np.int64).ravel()
     keys = np.unique(src * np.int64(n) + dst)

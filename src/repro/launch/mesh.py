@@ -38,6 +38,25 @@ def make_data_mesh(data: int | None = None):
     return jax.make_mesh((data or jax.device_count(),), ("data",))
 
 
+def tier_mesh_for(tree):
+    """2-D ``(pod, data)`` mesh for a :class:`repro.core.hierarchy.
+    TierTree`: "pod" spans tier-1 gateways (cross-pod traffic is the
+    up-tree parameter psum — it scales with the gateway count, not n)
+    and "data" spans devices within a gateway. The "pod" extent never
+    exceeds the gateway count and the "data" extent never exceeds the
+    WIDEST tier-1 bucket, so bucket-padding cannot manufacture
+    phantom-only shards. Falls back to the 1-D "data" mesh whenever
+    either axis would collapse to extent 1 (single-gateway trees,
+    single-device hosts, or too few devices to split)."""
+    dc = jax.device_count()
+    g1 = int(tree.group_counts[0])
+    pods = max(1, min(dc, g1))
+    data = max(1, min(dc // pods, int(tree.widest_bucket)))
+    if pods == 1 or data == 1:
+        return make_data_mesh(max(1, min(dc, int(tree.n))))
+    return jax.make_mesh((pods, data), ("pod", "data"))
+
+
 def data_mesh_for(n: int):
     """1-D "data" mesh sized for a bucket of n fog devices: never wider
     than n, so bucket-padding the device axis up to a mesh multiple

@@ -134,10 +134,21 @@ def run_fog(args) -> dict:
     engine = resolve_engine(args.engine)
     if (args.checkpoint or args.resume) and args.engine == "auto":
         engine = "scan"                  # checkpointing is scan-only
+    hierarchy = None
+    if args.tiers:
+        from repro.core import hierarchy as hr
+
+        hierarchy = hr.TierTree.from_spec(args.tiers, cfg.n)
+        if hierarchy.taus[0] != cfg.tau:
+            raise SystemExit(f"--tiers first period "
+                             f"{hierarchy.taus[0]} must equal --tau "
+                             f"{cfg.tau}")
+        if args.engine == "auto":
+            engine = "scan"              # the tree picks the program
     run_kw = dict(streams=streams, schedule=schedule, engine=engine,
                   faults=faults, guard=not args.unguarded,
                   quorum=args.quorum, checkpoint_path=args.checkpoint,
-                  resume=args.resume)
+                  resume=args.resume, hierarchy=hierarchy)
     sanitize_report = None
     if args.sanitize:
         from repro.core import sanitize as sz
@@ -166,6 +177,9 @@ def run_fog(args) -> dict:
            "final_acc": hist["test_acc"][-1] if hist["test_acc"] else None,
            "acc_curve": hist["test_acc"], "cost": cost,
            "sim_before": hist["sim_before"], "sim_after": hist["sim_after"]}
+    if hierarchy is not None:
+        out["engine"] = "hierarchical"
+        out["hierarchy"] = hist["hierarchy"]
     if faults is not None:
         out["fault_summary"] = hist["fault_summary"]
         out["quorum_skips"] = int(sum(
@@ -333,6 +347,12 @@ def main(argv=None):
                     help="alias for --replan once (plan on the base "
                          "graph; realization loses in-flight data over "
                          "dead links / churned-out receivers)")
+    ap.add_argument("--tiers", default=None, metavar="SPEC",
+                    help="hierarchical aggregation tree as "
+                         "'g1@tau1,g2@tau2,...' (e.g. '4@10,1@20': 4 "
+                         "gateways every 10 rounds, one root every "
+                         "20); the first period must equal --tau and "
+                         "the last group count must be 1")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "scan", "sharded", "batched",
                              "legacy"],

@@ -286,6 +286,21 @@ class TestOraclePairing:
                        tests_sources={"test_x.py": "x = 1"})
         assert res.ok and len(res.waived) == 1
 
+    def test_tier_and_hierarchical_twins_require_flat_oracle(self):
+        src = ("def aggregate_tier(a):\n"
+               "    return a\n"
+               "def run_rounds_hierarchical(a):\n"
+               "    return a\n")
+        res = run_rule("oracle-pairing", {"core/hier.py": src},
+                       tests_sources={"test_x.py": "def test(): pass"})
+        assert [line for _, line in names(res)] == [1, 3]
+        tests = {"test_h.py": "from repro.core.engine import "
+                              "aggregate_tier\n"
+                              "run_rounds_hierarchical(...)"}
+        res = run_rule("oracle-pairing", {"core/hier.py": src},
+                       tests_sources=tests)
+        assert res.ok
+
 
 # ---------------------------------------------------------------------------
 # waiver machinery
